@@ -1,0 +1,71 @@
+"""Paper Fig 8 + Table 3: batching effect and preloading.
+
+Fig 8: measured U-Net step time at batch sizes 1/2/4/8 on the reduced
+diffusion config; fits the paper's t_batch = t_startup + t_task*n model
+and derives c_batch(b) — the scheduler's slowdown constant.
+
+Table 3 (preloading): measured cold staging (host->device transfer +
+first dispatch) vs resident weights, plus the v5e HBM-residency model
+(params bytes / 819 GB/s) for the production sizes.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, stable_diffusion_v1
+from repro.core.cost_model import c_batch_of, fit_batch_model
+from repro.models import diffusion
+from repro.models.common import param_bytes
+
+HBM_BW = 819e9
+
+
+def run():
+    rows = []
+    dc = stable_diffusion_v1.reduced()
+    dp = diffusion.init_params(dc, jax.random.PRNGKey(0))
+    sizes = (1, 2, 4, 8)
+    times = []
+    for b in sizes:
+        toks = jnp.zeros((b, dc.text_len), jnp.int32)
+        ctx2 = diffusion.encode_prompt(dp, dc, toks, toks)
+        lat = jax.random.normal(jax.random.PRNGKey(1),
+                                (b, dc.latent_channels, dc.latent_size,
+                                 dc.latent_size))
+        step = jax.jit(
+            lambda p, l, c: diffusion.denoise_step(p, dc, l, c, 0))
+        step(dp, lat, ctx2).block_until_ready()
+        t0 = time.perf_counter()
+        n = 8
+        for _ in range(n):
+            out = step(dp, lat, ctx2)
+        out.block_until_ready()
+        t = (time.perf_counter() - t0) / n
+        times.append(t)
+        rows.append((f"fig8/batch_{b}/total", t * 1e6, "us per step"))
+        rows.append((f"fig8/batch_{b}/per_image", t / b * 1e6, "us"))
+    t_startup, t_task = fit_batch_model(sizes, times)
+    rows.append(("fig8/fit/t_startup", t_startup * 1e6, "us"))
+    rows.append(("fig8/fit/t_task", t_task * 1e6, "us per extra image"))
+    cb2 = c_batch_of(2, t_startup, t_task)
+    rows.append(("fig8/fit/c_batch(2)", cb2,
+                 f"paper measured ~1.6 on A40; ratio t(2)/t(1)={times[1]/times[0]:.2f}"))
+
+    # Table 3: preloading
+    leaves = jax.tree_util.tree_leaves(dp)
+    host = [np.asarray(x) for x in leaves]
+    t0 = time.perf_counter()
+    dev = [jax.device_put(h) for h in host]
+    jax.block_until_ready(dev)
+    stage_s = time.perf_counter() - t0
+    rows.append(("table3/measured_staging", stage_s * 1e6,
+                 f"us to stage {param_bytes(dp)/1e6:.0f} MB (this host)"))
+    for arch in ("qwen2-7b", "nemotron-4-15b", "mamba2-780m"):
+        cfg = get_config(arch)
+        nbytes = cfg.param_count() * 2
+        rows.append((f"table3/hbm_load_model/{arch}", nbytes / HBM_BW * 1e6,
+                     f"us to re-stage {nbytes/1e9:.1f} GB at 819 GB/s "
+                     "(why weights stay resident)"))
+    return rows

@@ -1,0 +1,30 @@
+"""Paper Figs 14-15: batching-cost sweep + latency after batching.
+
+Fig 14 claim: the batchable fraction stays ~constant until c_batch
+exceeds ~2.0 and is still >=60% at 3.0 — because the latency win comes
+from fewer LOCAL cycles, not from cloud speed.
+"""
+import time
+
+import numpy as np
+
+from repro.serving.simulator import CALIBRATED, batching_cost_sweep, run_table4
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    sweep = batching_cost_sweep(np.arange(1.0, 3.51, 0.25))
+    dt = (time.perf_counter() - t0) * 1e6 / len(sweep)
+    for r in sweep:
+        rows.append((f"fig14/c_batch_{r['c_batch']:.2f}", dt,
+                     f"batchable={r['batchable_fraction']:.3f} "
+                     f"gpu_s={r['cloud_gpu_time']:.1f}"))
+    at3 = [r for r in sweep if abs(r["c_batch"] - 3.0) < 1e-9][0]
+    rows.append(("fig14/claim_60pct_at_3.0", at3["batchable_fraction"] * 100,
+                 "paper: ~60% still batchable at cost 3.0"))
+    summ = run_table4(1000, seed=0)["variable+batching"]
+    lats = np.array(summ.latencies)
+    rows.append(("fig15/latency_after_batching/mean", float(lats.mean()) * 1e6,
+                 f"p99={summ.p99_latency():.2f}s viol={summ.violations}"))
+    return rows

@@ -1,0 +1,65 @@
+"""Paper Figs 6 & 7: per-device inference performance.
+
+Fig 6 (RegNet first vs second inference): measured on this host with the
+reduced RegNet — the first call includes compilation + weight staging
+(the paper's 'startup cost on traditional GPUs'), the second is steady
+state.  Fig 7 (diffusion rates across devices): steady-state iteration
+rate measured here, plus the paper's published device profiles used by
+the scheduler benchmarks.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import regnet_y_128gf, stable_diffusion_v1
+from repro.models import diffusion, regnet
+
+# Paper Fig 7 / §5.4 device profiles (iterations/s, 512x512, 50 steps)
+PAPER_DEVICE_RATES = {
+    "iphone12mini": 1.44, "m1-macbook": 1.97, "m2-macbook": 2.75,
+    "m2-ipad-pro": 3.07, "rtx2080ti": 3.52, "a40": 4.93,
+    "rtx4090": 62.5 / 8,   # per-image-equivalent of the 62.5 it/s batch rate
+}
+
+
+def run():
+    rows = []
+    rc = regnet_y_128gf.reduced()
+    p = regnet.init_params(rc, jax.random.PRNGKey(0))
+    img = jax.random.normal(jax.random.PRNGKey(1),
+                            (1, 3, rc.image_size, rc.image_size))
+    fwd = jax.jit(lambda p, x: regnet.forward(p, rc, x))
+    t0 = time.perf_counter()
+    fwd(p, img).block_until_ready()
+    first = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    for _ in range(5):
+        fwd(p, img).block_until_ready()
+    second = (time.perf_counter() - t0) / 5 * 1e6
+    rows.append(("fig6/regnet/first_inference", first, "us (incl. compile)"))
+    rows.append(("fig6/regnet/second_inference", second, "us steady"))
+    rows.append(("fig6/regnet/startup_ratio", first / second,
+                 "paper: GPUs show large first-run cost"))
+
+    dc = stable_diffusion_v1.reduced()
+    dp = diffusion.init_params(dc, jax.random.PRNGKey(0))
+    toks = jnp.zeros((1, dc.text_len), jnp.int32)
+    ctx2 = diffusion.encode_prompt(dp, dc, toks, toks)
+    lat = jax.random.normal(jax.random.PRNGKey(2),
+                            (1, dc.latent_channels, dc.latent_size,
+                             dc.latent_size))
+    step = jax.jit(lambda p, l, c: diffusion.denoise_step(p, dc, l, c, 0))
+    step(dp, lat, ctx2).block_until_ready()
+    t0 = time.perf_counter()
+    n = 10
+    for _ in range(n):
+        lat2 = step(dp, lat, ctx2)
+    lat2.block_until_ready()
+    per_iter = (time.perf_counter() - t0) / n
+    rows.append(("fig7/diffusion/this_host_rate", per_iter * 1e6,
+                 f"{1.0 / per_iter:.2f} iter/s (reduced cfg)"))
+    for name, rate in PAPER_DEVICE_RATES.items():
+        rows.append((f"fig7/diffusion/profile/{name}", 1e6 / rate,
+                     f"{rate} iter/s (paper-published)"))
+    return rows

@@ -1,0 +1,34 @@
+"""Roofline table from the dry-run artifact (EXPERIMENTS.md §Roofline).
+
+Reads dryrun.jsonl (produced by `python -m repro.launch.dryrun`) and
+emits one row per (arch x cell x mesh): the three terms, the dominant
+bottleneck, and MODEL_FLOPS/HLO_FLOPs.  If the artifact is missing the
+benchmark reports SKIP rather than re-running the (slow) dry-run.
+"""
+import json
+import os
+
+ARTIFACT = os.environ.get("DRYRUN_ARTIFACT", "dryrun.jsonl")
+
+
+def run():
+    rows = []
+    if not os.path.exists(ARTIFACT):
+        return [("roofline/SKIP", 0.0,
+                 f"{ARTIFACT} not found — run python -m repro.launch.dryrun")]
+    seen = {}
+    for line in open(ARTIFACT):
+        r = json.loads(line)
+        key = (r["arch"], r["cell"], r.get("mesh", "-"))
+        seen[key] = r  # keep last occurrence
+    for (arch, cell, mesh), r in sorted(seen.items()):
+        if r["status"] != "OK":
+            rows.append((f"roofline/{arch}/{cell}/{mesh}", 0.0, r["status"]))
+            continue
+        rows.append((
+            f"roofline/{arch}/{cell}/{mesh}",
+            max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e6,
+            f"comp={r['t_compute_s']:.4f}s mem={r['t_memory_s']:.4f}s "
+            f"coll={r['t_collective_s']:.4f}s dom={r['dominant']} "
+            f"useful={r['useful_flops_ratio']} frac={r['roofline_fraction']}"))
+    return rows

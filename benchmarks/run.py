@@ -1,0 +1,52 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Each module exposes
+``run() -> list[(name, us_per_call, derived_info)]``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "split_tensors",      # paper Tables 1 & 2
+    "transport_cost",     # Figs 4 & 5
+    "device_rates",       # Figs 6 & 7
+    "batching",           # Fig 8 + Table 3
+    "cost_model_fit",     # Fig 10
+    "scheduler_table4",   # Table 4 + Figs 11-13
+    "batching_sweep",     # Figs 14-15
+    "projection",         # Figs 16-20
+    "ablation_nstep",     # beyond-paper: quantization-granularity sweep
+    "roofline_report",    # EXPERIMENTS.md §Roofline (reads dryrun.jsonl)
+]
+
+
+def main() -> None:
+    only = sys.argv[1:] or MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        if mod_name not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            rows = mod.run()
+            for name, us, info in rows:
+                print(f"{name},{us:.2f},{info}")
+        except Exception as e:
+            failures += 1
+            traceback.print_exc(file=sys.stderr)
+            print(f"{mod_name}/ERROR,0.00,{type(e).__name__}: {e}")
+        finally:
+            dt = time.perf_counter() - t0
+            print(f"_module/{mod_name}/wall,{dt*1e6:.0f},total module seconds="
+                  f"{dt:.1f}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

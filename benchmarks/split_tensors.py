@@ -1,0 +1,35 @@
+"""Paper Tables 1 & 2: split-point boundary tensor sizes.
+
+RegNet sizes via jax.eval_shape on the full regnet_y_128gf (no
+allocation); diffusion payloads from the wire format (latent fp32 +
+context fp16), matching the paper's byte counts (theirs include the
+~1 KB torch.save pickle header; ours is an exact manifest header).
+Also audits the generalized layer-split boundary for every LM arch.
+"""
+import time
+
+from repro.configs import ARCH_IDS, get_config, regnet_y_128gf, stable_diffusion_v1
+from repro.core.segmentation import hidden_payload_bytes
+from repro.models import diffusion, regnet
+
+PAPER_TABLE1_KB = {"stem": 4608, "block1": 188496, "block2": 9216,
+                   "block3": 5202, "block4": 41472, "avgpool": 29}
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    acts = regnet.split_activations(regnet_y_128gf.CONFIG)
+    for name, shape, nbytes in acts:
+        rows.append((f"table1/regnet/{name}", nbytes / 1024,
+                     f"shape={list(shape)} paper_KB={PAPER_TABLE1_KB[name]}"))
+    for name, nbytes in diffusion.split_payload(stable_diffusion_v1.CONFIG):
+        rows.append((f"table2/diffusion/{name}", nbytes / 1024, "wire KiB"))
+    # generalized: per-arch layer-split hidden boundary at prefill_32k shape
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        b = hidden_payload_bytes(cfg, batch=1, seq=2048)
+        rows.append((f"layer_boundary/{arch}", b / 1024,
+                     "bf16 hidden (1,2048,d) KiB"))
+    dt = (time.perf_counter() - t0) * 1e6 / max(1, len(rows))
+    return [(name, dt, f"{val:.1f} {info}") for name, val, info in rows]

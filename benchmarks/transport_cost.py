@@ -1,0 +1,46 @@
+"""Paper Figs 4 & 5: transmission cost + serde cost vs tensor size.
+
+Serde is MEASURED on this host (serialize/deserialize round trip of fp32
+tensors 10x10 .. 2000x2000); transmission uses the calibrated link models
+(local LAN vs the paper's Chicago->GCloud-Iowa WAN) — reproducing the
+paper's crossover: LAN wins for small tensors (RTT-bound), WAN's better
+NIC wins for large (bandwidth-bound), and super-linear growth appears
+once packet counts make retransmissions non-negligible.
+"""
+import time
+
+import numpy as np
+
+from repro.core.transport import (
+    LOCAL_LINK,
+    WAN_LINK,
+    deserialize,
+    serialize,
+    transmission_time,
+)
+
+SIZES = (10, 50, 100, 200, 500, 1000, 2000)
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in SIZES:
+        x = {"t": rng.standard_normal((n, n)).astype(np.float32)}
+        t0 = time.perf_counter()
+        reps = 20 if n <= 500 else 5
+        for _ in range(reps):
+            data = serialize(x)
+        ser_us = (time.perf_counter() - t0) / reps * 1e6
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            y = deserialize(data)
+        de_us = (time.perf_counter() - t0) / reps * 1e6
+        assert np.array_equal(y["t"], x["t"])
+        rows.append((f"fig5/serialize/{n}x{n}", ser_us, "measured us"))
+        rows.append((f"fig5/deserialize/{n}x{n}", de_us, "measured us"))
+        for link in (LOCAL_LINK, WAN_LINK):
+            t = transmission_time(len(data), link) * 1e6
+            rows.append((f"fig4/transmit/{link.name}/{n}x{n}", t,
+                         f"model us ({len(data)} B)"))
+    return rows

@@ -1,0 +1,33 @@
+"""The paper's contribution: cost model, scheduler, segmentation, transport."""
+from repro.core.cost_model import (  # noqa: F401
+    CostParams,
+    SegmentCost,
+    batchable,
+    c_batch_of,
+    cloud_gpu_time,
+    e2e_latency,
+    fit_batch_model,
+    paper_quantize,
+    quantize_step,
+    segment_latency,
+    solve_n_cloud,
+    solve_split_fraction,
+)
+from repro.core.scheduler import (  # noqa: F401
+    AllCloudScheduler,
+    AllocationPlan,
+    Assignment,
+    ConstantIterationScheduler,
+    IntelligentBatchingScheduler,
+    ScheduleSummary,
+    VariableIterationScheduler,
+    allocate_gpus,
+    summarize,
+)
+from repro.core.telemetry import (  # noqa: F401
+    ClientRegistry,
+    DeviceProfile,
+    EWMAProbe,
+    generate_fleet,
+    upgrade_fleet,
+)

@@ -1,0 +1,206 @@
+"""The paper's scheduler (§4.3–§4.5): decide per request how much of the
+job the cloud runs, quantized to a step grid so requests form batchable
+groups, with optional intelligent batching.
+
+Four policies, matching paper Table 4:
+  * AllCloudScheduler          — n_cloud = n_total for everyone
+  * ConstantIterationScheduler — one n for all devices, sized for the
+                                 slowest (the paper's "45 of 50")
+  * VariableIterationScheduler — per-device solve + step quantization
+  * IntelligentBatchingScheduler — variable + §4.4 batching admission
+
+Each returns per-request ``Assignment``s; ``summarize`` produces the cloud
+GPU time (Table 4), latency distribution (Figs 12/13/15), and group
+workloads w_group (§4.5) used by the GPU resource allocator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.cost_model import (
+    CostParams,
+    batchable,
+    cloud_gpu_time,
+    e2e_latency,
+    quantize_step,
+    solve_n_cloud,
+)
+from repro.core.telemetry import DeviceProfile
+
+
+@dataclasses.dataclass
+class Assignment:
+    device_id: str
+    r_dev: float
+    t_network: float
+    n_exact: float            # real-valued solver output
+    n_final: int              # after step quantization
+    latency: float            # predicted E2E latency at n_final
+    feasible: bool            # latency <= t_lim
+    batched: bool = False     # set by intelligent batching
+    batch_factor: float = 1.0 # c_batch / batch_size applied to GPU time
+
+    def gpu_time(self, p: CostParams) -> float:
+        return cloud_gpu_time(self.n_final, p, self.batch_factor)
+
+
+@dataclasses.dataclass
+class ScheduleSummary:
+    name: str
+    assignments: List[Assignment]
+    total_gpu_time: float
+    latencies: List[float]
+    violations: int
+    group_workloads: Dict[int, float]     # n_final -> w_group (§4.5)
+    batched_fraction: float = 0.0
+
+    def p99_latency(self) -> float:
+        xs = sorted(self.latencies)
+        return xs[min(len(xs) - 1, int(0.99 * len(xs)))]
+
+
+class SchedulerBase:
+    name = "base"
+
+    def __init__(self, params: CostParams):
+        self.p = params
+
+    def assign_one(self, prof: DeviceProfile) -> Assignment:
+        raise NotImplementedError
+
+    def schedule(self, fleet: Sequence[DeviceProfile]) -> List[Assignment]:
+        return [self.assign_one(d) for d in fleet]
+
+    def summarize(self, fleet: Sequence[DeviceProfile]) -> ScheduleSummary:
+        asg = self.schedule(fleet)
+        return summarize(self.name, asg, self.p)
+
+
+def _mk_assignment(prof: DeviceProfile, n_exact: float, n_final: int,
+                   p: CostParams) -> Assignment:
+    lat = e2e_latency(n_final, prof.r_dev, p, prof.rtt, c_batch=1.0)
+    return Assignment(
+        device_id=prof.device_id, r_dev=prof.r_dev, t_network=prof.rtt,
+        n_exact=n_exact, n_final=n_final, latency=lat,
+        feasible=lat <= p.t_lim + 1e-9)
+
+
+class AllCloudScheduler(SchedulerBase):
+    name = "all_cloud"
+
+    def assign_one(self, prof: DeviceProfile) -> Assignment:
+        return _mk_assignment(prof, float(self.p.n_total), self.p.n_total, self.p)
+
+
+class ConstantIterationScheduler(SchedulerBase):
+    """One iteration count for the whole fleet, sized for the slowest
+    device the service targets (paper: 45 of 50 for the 3-sigma fleet)."""
+    name = "constant"
+
+    def __init__(self, params: CostParams, worst_r_dev: float,
+                 worst_rtt: float = 0.3):
+        super().__init__(params)
+        n = solve_n_cloud(worst_r_dev, params, worst_rtt, c_batch=1.0)
+        self.n_const = quantize_step(n, params.n_step, params.n_total)
+
+    def assign_one(self, prof: DeviceProfile) -> Assignment:
+        return _mk_assignment(prof, float(self.n_const), self.n_const, self.p)
+
+
+class VariableIterationScheduler(SchedulerBase):
+    name = "variable"
+
+    def assign_one(self, prof: DeviceProfile) -> Assignment:
+        n = solve_n_cloud(prof.r_dev, self.p, prof.rtt, c_batch=1.0)
+        nf = quantize_step(n, self.p.n_step, self.p.n_total)
+        return _mk_assignment(prof, n, nf, self.p)
+
+
+class IntelligentBatchingScheduler(VariableIterationScheduler):
+    """Variable iteration + §4.4: within each n_final group, requests that
+    still meet the SLA at the batched rate are paired; each pair costs
+    c_batch/batch_size GPU-time per request.  Odd leftovers run alone.
+
+    ``batched`` marks ADMISSION (the request tolerates the batched rate —
+    what paper Fig 14 sweeps); the GPU-time discount is only applied when
+    batching actually saves accelerator time (c_batch < batch_size),
+    otherwise the engine runs requests solo and total time never exceeds
+    the plain variable scheduler's.
+    """
+    name = "variable+batching"
+
+    def __init__(self, params: CostParams, c_batch: float,
+                 batch_size: int = 2):
+        super().__init__(params)
+        self.c_batch = c_batch
+        self.batch_size = batch_size
+
+    def schedule(self, fleet: Sequence[DeviceProfile]) -> List[Assignment]:
+        asg = super().schedule(fleet)
+        saves_time = self.c_batch < self.batch_size
+        groups: Dict[int, List[Assignment]] = {}
+        for a in asg:
+            if a.n_final > 0:
+                groups.setdefault(a.n_final, []).append(a)
+        for n_final, members in groups.items():
+            ok = [a for a in members
+                  if batchable(a.n_final, a.r_dev, self.p, a.t_network,
+                               self.c_batch)]
+            # pair up: batches of `batch_size`, leftovers unbatched
+            full = len(ok) // self.batch_size * self.batch_size
+            for i, a in enumerate(ok):
+                if i < full:
+                    a.batched = True
+                    if saves_time:
+                        a.batch_factor = self.c_batch / self.batch_size
+                        a.latency = e2e_latency(a.n_final, a.r_dev, self.p,
+                                                a.t_network, self.c_batch)
+                        a.feasible = a.latency <= self.p.t_lim + 1e-9
+        return asg
+
+
+def summarize(name: str, assignments: List[Assignment],
+              p: CostParams) -> ScheduleSummary:
+    total = sum(a.gpu_time(p) for a in assignments)
+    lats = [a.latency for a in assignments]
+    viol = sum(not a.feasible for a in assignments)
+    wg: Dict[int, float] = {}
+    for a in assignments:
+        wg[a.n_final] = wg.get(a.n_final, 0.0) + a.n_final
+    frac = (sum(a.batched for a in assignments) / max(1, len(assignments)))
+    return ScheduleSummary(
+        name=name, assignments=assignments, total_gpu_time=total,
+        latencies=lats, violations=viol, group_workloads=wg,
+        batched_fraction=frac)
+
+
+# --------------------------------------------------------------------------
+# §4.5: GPU resource allocation from group workloads
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class AllocationPlan:
+    fractions: Dict[int, float]     # n_final group -> fraction of GPUs
+    total_workload: float
+    gpus_needed: int
+    release_gpus: bool              # total below threshold -> free capacity
+
+
+def allocate_gpus(summary: ScheduleSummary, p: CostParams, n_gpus: int,
+                  horizon_s: float, release_threshold: float = 0.5
+                  ) -> AllocationPlan:
+    """Proportional allocation by w_group = n_task * n_group (paper §4.5).
+
+    gpus_needed = total iterations / (r_cloud * horizon); when the demand
+    falls below ``release_threshold * n_gpus`` the plan flags that GPUs can
+    be released to other (production) jobs — the paper's over-subscription
+    argument.
+    """
+    total = sum(summary.group_workloads.values())
+    fracs = {g: (w / total if total else 0.0)
+             for g, w in summary.group_workloads.items()}
+    needed = math.ceil(total / (p.r_cloud * horizon_s)) if total else 0
+    return AllocationPlan(
+        fractions=fracs, total_workload=total, gpus_needed=needed,
+        release_gpus=needed < release_threshold * n_gpus)

@@ -1,0 +1,42 @@
+"""SLA policy + adaptive controller (paper §7: tighten when idle, relax
+under load to avoid dropping requests)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class SLAPolicy:
+    t_lim: float                  # target end-to-end latency, seconds
+    t_floor: float = 1.0          # tightest allowed
+    t_ceil: float = 60.0          # loosest allowed
+
+
+class AdaptiveSLAController:
+    """Adjust the SLA target from observed cloud utilization.
+
+    utilization > high_water  -> relax t_lim (multiplicative increase)
+    utilization < low_water   -> tighten t_lim (slow additive decrease)
+
+    This is the paper's §7 policy knob: under pressure every request is
+    still served (more device work per job); when idle, latency improves.
+    """
+
+    def __init__(self, policy: SLAPolicy, high_water: float = 0.85,
+                 low_water: float = 0.5, relax: float = 1.25,
+                 tighten: float = 0.95):
+        self.policy = policy
+        self.high = high_water
+        self.low = low_water
+        self.relax = relax
+        self.tighten = tighten
+
+    def update(self, utilization: float) -> float:
+        t = self.policy.t_lim
+        if utilization > self.high:
+            t *= self.relax
+        elif utilization < self.low:
+            t *= self.tighten
+        t = min(max(t, self.policy.t_floor), self.policy.t_ceil)
+        self.policy.t_lim = t
+        return t

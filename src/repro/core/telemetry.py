@@ -1,0 +1,108 @@
+"""Client/device telemetry: profiles, network probes, fleet generation.
+
+The scheduler "collects information about network quality, client device
+capability, and job requirements" (paper abstract).  This module is that
+collection layer: devices register, report measured diffusion rates, and
+the network probe keeps EWMA estimates of RTT/bandwidth per client.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DeviceProfile:
+    device_id: str
+    r_dev: float                  # measured iterations/s (or FLOP/s scale)
+    k_decode: float = 1.0         # decode-cost scale (paper: prop. to r_dev)
+    rtt: float = 0.3              # seconds, round trip
+    bandwidth: float = 12.5e6     # bytes/s (100 Mbps default)
+    has_accelerator: bool = True
+
+    def decode_time(self) -> float:
+        return self.k_decode / self.r_dev
+
+
+class EWMAProbe:
+    """Exponentially-weighted estimate of a noisy link/device measurement."""
+
+    def __init__(self, alpha: float = 0.3, initial: Optional[float] = None):
+        self.alpha = alpha
+        self.value = initial
+        self.n_samples = 0
+
+    def update(self, sample: float) -> float:
+        if self.value is None:
+            self.value = float(sample)
+        else:
+            self.value = self.alpha * float(sample) + (1 - self.alpha) * self.value
+        self.n_samples += 1
+        return self.value
+
+
+class ClientRegistry:
+    """Registry of connected clients with live telemetry."""
+
+    def __init__(self):
+        self._profiles: Dict[str, DeviceProfile] = {}
+        self._rtt: Dict[str, EWMAProbe] = {}
+        self._rate: Dict[str, EWMAProbe] = {}
+
+    def register(self, profile: DeviceProfile) -> None:
+        self._profiles[profile.device_id] = profile
+        self._rtt[profile.device_id] = EWMAProbe(initial=profile.rtt)
+        self._rate[profile.device_id] = EWMAProbe(initial=profile.r_dev)
+
+    def report_rtt(self, device_id: str, rtt: float) -> None:
+        self._rtt[device_id].update(rtt)
+
+    def report_rate(self, device_id: str, r_dev: float) -> None:
+        self._rate[device_id].update(r_dev)
+
+    def profile(self, device_id: str) -> DeviceProfile:
+        p = self._profiles[device_id]
+        return dataclasses.replace(
+            p, rtt=self._rtt[device_id].value, r_dev=self._rate[device_id].value)
+
+    def all_profiles(self) -> List[DeviceProfile]:
+        return [self.profile(d) for d in self._profiles]
+
+    def __len__(self) -> int:
+        return len(self._profiles)
+
+
+# --------------------------------------------------------------------------
+# Fleet generation (paper §5.4: N(2.25, 0.28) over 1000 devices, §5.6
+# projections with upgraded fleets)
+# --------------------------------------------------------------------------
+def generate_fleet(n: int, mean: float, std: float, seed: int = 0,
+                   rtt: float = 0.3, k_decode: float = 1.0,
+                   prefix: str = "dev") -> List[DeviceProfile]:
+    rng = np.random.default_rng(seed)
+    rates = rng.normal(mean, std, size=n)
+    rates = np.clip(rates, 0.05, None)       # no negative/zero rates
+    return [
+        DeviceProfile(device_id=f"{prefix}{i}", r_dev=float(r),
+                      k_decode=k_decode, rtt=rtt)
+        for i, r in enumerate(rates)
+    ]
+
+
+def upgrade_fleet(fleet: Iterable[DeviceProfile], fraction: float,
+                  new_mean: float, new_std: float, seed: int = 1,
+                  eligible=None) -> List[DeviceProfile]:
+    """Paper §5.6: `fraction` of (eligible) users upgrade to a newer device
+    whose rate is drawn from N(new_mean, new_std)."""
+    fleet = list(fleet)
+    rng = np.random.default_rng(seed)
+    out = []
+    for p in fleet:
+        if (eligible is None or eligible(p)) and rng.random() < fraction:
+            r = float(np.clip(rng.normal(new_mean, new_std), 0.05, None))
+            out.append(dataclasses.replace(p, r_dev=r))
+        else:
+            out.append(p)
+    return out

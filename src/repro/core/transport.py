@@ -1,0 +1,203 @@
+"""Transport layer: serialization, quantized transfer, transmission model.
+
+Replaces the paper's Python socket + ``torch.save`` stack with a
+byte-exact, framework-neutral wire format:
+
+  payload = header (manifest: json with shapes/dtypes/quant params)
+          + raw little-endian buffers
+
+and implements the paper's §7 refinements that the original leaves as
+future work: fp16/int8 quantized transfer of the boundary tensors, and a
+lossy (UDP-style) channel with graceful degradation (missing packets are
+zero-filled — acceptable for diffusion latents, which "fail gracefully").
+
+``TransmissionModel`` reproduces the *shape* of paper Fig 4: latency is
+RTT-dominated for small tensors, bandwidth-dominated after, and grows
+super-linearly once the packet count makes retransmissions likely.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import math
+import zlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+WIRE_VERSION = 1
+HEADER_LEN_BYTES = 8
+
+
+# --------------------------------------------------------------------------
+# Serialization
+# --------------------------------------------------------------------------
+def serialize(tree: Dict[str, np.ndarray], *, compress: bool = False) -> bytes:
+    """Dict of named arrays -> wire bytes.  Deterministic ordering."""
+    names = sorted(tree)
+    manifest = {
+        "v": WIRE_VERSION,
+        "compress": compress,
+        "tensors": [
+            {"name": n, "shape": list(tree[n].shape),
+             "dtype": np.dtype(tree[n].dtype).str}
+            for n in names
+        ],
+    }
+    head = json.dumps(manifest).encode()
+    buf = io.BytesIO()
+    buf.write(len(head).to_bytes(HEADER_LEN_BYTES, "little"))
+    buf.write(head)
+    for n in names:
+        raw = np.ascontiguousarray(tree[n]).tobytes()
+        if compress:
+            raw = zlib.compress(raw, level=1)
+            buf.write(len(raw).to_bytes(HEADER_LEN_BYTES, "little"))
+        buf.write(raw)
+    return buf.getvalue()
+
+
+def deserialize(data: bytes) -> Dict[str, np.ndarray]:
+    off = HEADER_LEN_BYTES
+    hlen = int.from_bytes(data[:off], "little")
+    manifest = json.loads(data[off:off + hlen])
+    off += hlen
+    out = {}
+    for spec in manifest["tensors"]:
+        dt = np.dtype(spec["dtype"])
+        count = int(np.prod(spec["shape"])) if spec["shape"] else 1
+        if manifest.get("compress"):
+            clen = int.from_bytes(data[off:off + HEADER_LEN_BYTES], "little")
+            off += HEADER_LEN_BYTES
+            raw = zlib.decompress(data[off:off + clen])
+            off += clen
+        else:
+            nbytes = count * dt.itemsize
+            raw = data[off:off + nbytes]
+            off += nbytes
+        out[spec["name"]] = np.frombuffer(raw, dt).reshape(spec["shape"]).copy()
+    return out
+
+
+# --------------------------------------------------------------------------
+# Quantized transfer (paper §7, implemented)
+# --------------------------------------------------------------------------
+def quantize_fp16(x: np.ndarray) -> np.ndarray:
+    return x.astype(np.float16)
+
+
+def quantize_int8(x: np.ndarray) -> Tuple[np.ndarray, float, float]:
+    """Affine int8 quantization.  Returns (q, scale, zero_point)."""
+    lo, hi = float(x.min()), float(x.max())
+    scale = max((hi - lo) / 255.0, 1e-12)
+    zp = lo
+    q = np.clip(np.round((x - zp) / scale), 0, 255).astype(np.uint8)
+    return q, scale, zp
+
+
+def dequantize_int8(q: np.ndarray, scale: float, zp: float) -> np.ndarray:
+    return q.astype(np.float32) * scale + zp
+
+
+def pack_boundary(latent: np.ndarray, context: Optional[np.ndarray], *,
+                  mode: str = "paper") -> bytes:
+    """Pack a diffusion split payload.
+
+    mode="paper": latent fp32 + context fp16 (paper Table 2 byte counts).
+    mode="int8":  both int8-quantized (§7 refinement; ~4x smaller).
+    """
+    tree: Dict[str, np.ndarray] = {}
+    if mode == "paper":
+        tree["latent"] = latent.astype(np.float32)
+        if context is not None:
+            tree["context"] = context.astype(np.float16)
+    elif mode == "int8":
+        q, s, z = quantize_int8(latent)
+        tree["latent"] = q
+        tree["latent_qparams"] = np.array([s, z], np.float32)
+        if context is not None:
+            qc, sc, zc = quantize_int8(context)
+            tree["context"] = qc
+            tree["context_qparams"] = np.array([sc, zc], np.float32)
+    else:
+        raise ValueError(mode)
+    return serialize(tree)
+
+
+def unpack_boundary(data: bytes) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    tree = deserialize(data)
+    lat = tree["latent"]
+    if "latent_qparams" in tree:
+        s, z = tree["latent_qparams"]
+        lat = dequantize_int8(lat, float(s), float(z))
+    ctx = tree.get("context")
+    if ctx is not None and "context_qparams" in tree:
+        s, z = tree["context_qparams"]
+        ctx = dequantize_int8(ctx, float(s), float(z))
+    elif ctx is not None:
+        ctx = ctx.astype(np.float32)
+    return lat.astype(np.float32), ctx
+
+
+# --------------------------------------------------------------------------
+# Lossy channel (UDP-style) with graceful degradation
+# --------------------------------------------------------------------------
+def lossy_transfer(x: np.ndarray, drop_prob: float, seed: int = 0,
+                   packet_elems: int = 256) -> Tuple[np.ndarray, float]:
+    """Drop `packet_elems`-sized spans with prob `drop_prob`; zero-fill.
+
+    Returns (received array, fraction of elements lost).  Diffusion latents
+    tolerate this (paper §7: "generative models should fail gracefully").
+    """
+    flat = x.reshape(-1).copy()
+    n_packets = math.ceil(flat.size / packet_elems)
+    rng = np.random.default_rng(seed)
+    lost = rng.random(n_packets) < drop_prob
+    lost_elems = 0
+    for i in np.nonzero(lost)[0]:
+        a, b = i * packet_elems, min((i + 1) * packet_elems, flat.size)
+        flat[a:b] = 0.0
+        lost_elems += b - a
+    return flat.reshape(x.shape), lost_elems / flat.size
+
+
+# --------------------------------------------------------------------------
+# Transmission-time model (paper Fig 4)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LinkProfile:
+    name: str
+    rtt: float                   # round-trip, seconds
+    bandwidth: float             # bytes / second
+    mtu: int = 1448              # TCP payload per packet
+    loss_prob: float = 0.0       # per-packet loss probability
+    retrans_penalty: float = 0.05  # seconds per retransmitted packet
+
+
+# Calibrated to the paper's setups: a campus LAN and a Chicago->Iowa WAN.
+LOCAL_LINK = LinkProfile("local", rtt=0.004, bandwidth=40e6, loss_prob=2e-5)
+WAN_LINK = LinkProfile("gcloud-iowa", rtt=0.035, bandwidth=90e6, loss_prob=5e-6)
+MOBILE_LINK = LinkProfile("mobile-5g", rtt=0.030, bandwidth=12.5e6,
+                          loss_prob=1e-4)
+
+
+def transmission_time(nbytes: int, link: LinkProfile) -> float:
+    """Expected one-way transfer time: RTT + serialization at line rate +
+    expected retransmission penalty (super-linear once packets are many)."""
+    packets = math.ceil(nbytes / link.mtu)
+    expected_retrans = packets * link.loss_prob
+    return (link.rtt
+            + nbytes / link.bandwidth
+            + expected_retrans * (link.retrans_penalty + link.rtt))
+
+
+def roundtrip_time(nbytes_up: int, nbytes_down: int, link: LinkProfile) -> float:
+    return (transmission_time(nbytes_up, link)
+            + transmission_time(nbytes_down, link))
+
+
+def serde_time(nbytes: int, startup_s: float = 3e-5,
+               throughput: float = 8e9) -> float:
+    """Paper Fig 5: near-constant startup + memcpy-rate linear term."""
+    return startup_s + nbytes / throughput

@@ -1,0 +1,64 @@
+"""Gradient compression: per-leaf symmetric int8 with error feedback.
+
+At 1000+ node scale the gradient all-reduce is the dominant collective;
+int8 compression cuts its bytes 4x (vs bf16) at the cost of quantization
+noise.  Error feedback (Seide et al.; Karimireddy et al.) accumulates the
+quantization residual locally and re-injects it next step, which restores
+convergence to the uncompressed trajectory.
+
+``compress_tree_int8`` is the stateless variant used inside the jitted
+train step (quantize -> dequantize models the wire round trip; XLA still
+all-reduces the dequantized fp32, so this measures accuracy impact).
+``ErrorFeedback`` carries the residual across steps.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant_leaf(g):
+    gf = g.astype(jnp.float32)
+    if gf.ndim == 0:
+        return gf, jnp.float32(0.0)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)) / 127.0, 1e-20)
+    q = jnp.clip(jnp.round(gf / scale), -127, 127)
+    deq = q * scale
+    return deq, jnp.mean(jnp.square(deq - gf))
+
+
+def compress_tree_int8(grads) -> Tuple[Any, jnp.ndarray]:
+    """Round-trip every leaf through int8.  Returns (grads', mean MSE)."""
+    leaves, tdef = jax.tree_util.tree_flatten(grads)
+    outs, errs = [], []
+    for g in leaves:
+        d, e = _quant_leaf(g)
+        outs.append(d.astype(g.dtype))
+        errs.append(e)
+    err = jnp.mean(jnp.stack(errs)) if errs else jnp.float32(0.0)
+    return jax.tree_util.tree_unflatten(tdef, outs), err
+
+
+class ErrorFeedback:
+    """Residual-carrying compressor: g_t' = Q(g_t + e_{t-1});
+    e_t = (g_t + e_{t-1}) - g_t'."""
+
+    @staticmethod
+    def init(grads):
+        return jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    @staticmethod
+    def apply(grads, residual):
+        def one(g, r):
+            x = g.astype(jnp.float32) + r
+            d, _ = _quant_leaf(x)
+            return d.astype(g.dtype), x - d
+        pairs = jax.tree.map(one, grads, residual)
+        comp = jax.tree.map(lambda p: p[0], pairs,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        new_res = jax.tree.map(lambda p: p[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return comp, new_res

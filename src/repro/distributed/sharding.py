@@ -1,0 +1,242 @@
+"""Sharding rules: params (TP/EP), activations (DP/SP), optimizer (ZeRO-1).
+
+Policy summary (see DESIGN.md §5):
+  * batch over (pod, data); model-parallel over "model".
+  * attention: shard the head dim when divisible by the model axis,
+    otherwise leave replicated (e.g. MQA kv=1) — GSPMD keeps the math
+    correct either way, the rule just avoids silly uneven layouts.
+  * MLP: d_ff over model (megatron TP pattern: col-parallel in,
+    row-parallel out => one psum per block).
+  * MoE: per ``cfg.moe.partitioning``: "tp" shards each expert's d_ff,
+    "ep" shards the expert dim (requires divisibility — olmoe's 64).
+  * vocab: embed (V, d) -> V over model; lm_head (d, V) -> V over model.
+  * decode KV caches: batch over data; kv-heads over model when divisible,
+    else the sequence dim over model (flash-decoding style).
+  * ZeRO-1: optimizer leaves additionally sharded over the data axes on
+    the first free divisible dimension.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.moe import ShardCtx
+
+
+# --------------------------------------------------------------------------
+# Param rules
+# --------------------------------------------------------------------------
+def _divisible(n: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return False
+    size = (np.prod([mesh.shape[a] for a in axis])
+            if isinstance(axis, tuple) else mesh.shape[axis])
+    return n % int(size) == 0
+
+
+def param_spec(path: str, shape: Tuple[int, ...], cfg, mesh: Mesh,
+               model_axis: str = "model") -> P:
+    """PartitionSpec for one (possibly group-stacked) param leaf."""
+    m = model_axis
+    stacked = path.count("blocks") > 0 or "/encoder/" in path.replace("']['", "/")
+    # normalize path: keystr gives ['blocks']['b0']['wq'] style
+    key = path.replace("']['", "/").strip("[']")
+    leading: Tuple = ()
+    ndim = len(shape)
+
+    def spec(*axes):
+        # pad to ndim with None
+        out = list(axes) + [None] * (ndim - len(axes))
+        return P(*out)
+
+    is_stacked = bool(re.search(r"(blocks|encoder/blocks)/", key)) and ndim >= 1
+    body = shape[1:] if is_stacked else shape
+    lead = (None,) if is_stacked else ()
+
+    def bspec(*axes):
+        out = list(lead) + list(axes)
+        out += [None] * (ndim - len(out))
+        return P(*out)
+
+    leaf = key.split("/")[-1]
+    if leaf == "embed":
+        return spec(m if _divisible(shape[0], mesh, m) else None, None)
+    if leaf == "lm_head":
+        return spec(None, m if _divisible(shape[1], mesh, m) else None)
+    if leaf == "frontend_proj":
+        return spec(None, None)
+    # dense mlp (scoped BEFORE attention: mlp/wo is rank-2, block wo rank-3)
+    if "mlp" in key:
+        if leaf in ("wi_gate", "wi_up", "wi"):
+            return bspec(None, m if _divisible(body[1], mesh, m) else None)
+        if leaf == "wo":
+            return bspec(m if _divisible(body[0], mesh, m) else None, None)
+    # attention
+    if leaf in ("wq", "wk", "wv", "xwq", "xwk", "xwv"):
+        h = body[1]
+        return bspec(None, m if _divisible(h, mesh, m) else None, None)
+    if leaf in ("wo", "xwo"):
+        h = body[0]
+        return bspec(m if _divisible(h, mesh, m) else None, None, None)
+    if leaf in ("bq", "bk", "bv"):
+        h = body[0]
+        return bspec(m if _divisible(h, mesh, m) else None, None)
+    # moe
+    if "moe" in key:
+        ep = cfg.moe is not None and cfg.moe.partitioning == "ep" and \
+            _divisible(cfg.moe.num_experts, mesh, m)
+        if leaf == "router":
+            return bspec(None, None)
+        if leaf in ("w_gate", "w_up", "w_in"):
+            return bspec(m, None, None) if ep else bspec(
+                None, None, m if _divisible(body[2], mesh, m) else None)
+        if leaf == "w_down":
+            return bspec(m, None, None) if ep else bspec(
+                None, m if _divisible(body[1], mesh, m) else None, None)
+    # rglru
+    if "rglru" in key:
+        if leaf in ("w_rec_in", "w_gate_in"):
+            return bspec(None, m if _divisible(body[1], mesh, m) else None)
+        if leaf == "conv_w":
+            return bspec(None, m if _divisible(body[1], mesh, m) else None)
+        if leaf in ("wa", "wx"):
+            return bspec(m if _divisible(body[0], mesh, m) else None, None, None)
+        if leaf in ("ba", "bx", "lam"):
+            return bspec(m if _divisible(body[0], mesh, m) else None)
+        if leaf == "w_out":
+            return bspec(m if _divisible(body[0], mesh, m) else None, None)
+    # ssd — x/z (d_inner-wide, head-aligned) shard over model; the small
+    # B/C/dt projections stay replicated so the SSD scan is shard-local
+    if "ssd" in key:
+        if leaf in ("z_proj", "x_proj", "in_proj"):
+            return bspec(None, m if _divisible(body[1], mesh, m) else None)
+        if leaf in ("b_proj", "c_proj", "dt_proj", "conv_b", "conv_c"):
+            return bspec(None, None)
+        if leaf == "out_proj":
+            return bspec(m if _divisible(body[0], mesh, m) else None, None)
+        if leaf in ("conv_w", "conv_x"):
+            return bspec(None, m if _divisible(body[1], mesh, m) else None)
+        if leaf == "norm_scale":
+            return bspec(m if _divisible(body[0], mesh, m) else None)
+        if leaf in ("A_log", "dt_bias", "D"):
+            return bspec(None)
+    # norms, biases, scalars
+    return P(*([None] * ndim))
+
+
+def param_specs(params, cfg, mesh: Mesh, model_axis: str = "model"):
+    def one(path, leaf):
+        return param_spec(jax.tree_util.keystr(path), leaf.shape, cfg, mesh,
+                          model_axis)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# --------------------------------------------------------------------------
+# ZeRO-1 optimizer-state specs
+# --------------------------------------------------------------------------
+def zero1_spec(shape: Tuple[int, ...], pspec: P, mesh: Mesh,
+               data_axes: Tuple[str, ...]) -> P:
+    """Add the data axes to the first free, divisible dim of the spec."""
+    size = int(np.prod([mesh.shape[a] for a in data_axes]))
+    entries = list(pspec) + [None] * (len(shape) - len(pspec))
+    for i, (dim, cur) in enumerate(zip(shape, entries)):
+        if cur is None and dim % size == 0 and dim > 0:
+            entries[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+            return P(*entries)
+    return P(*entries)  # nothing divisible: stays as-is (small leaf)
+
+
+def opt_state_specs(opt_state, params_specs, mesh: Mesh,
+                    data_axes: Tuple[str, ...]):
+    """Specs for {"step", "master", "m", "v"} given the param specs."""
+    def tree_specs(tree):
+        def one(path, leaf):
+            # look up the matching param spec by path
+            ps = _lookup(params_specs, path)
+            return zero1_spec(leaf.shape, ps, mesh, data_axes)
+        return jax.tree_util.tree_map_with_path(one, tree)
+
+    def _lookup(tree, path):
+        node = tree
+        for k in path:
+            node = node[k.key] if hasattr(k, "key") else node[k.idx]
+        return node
+
+    return {
+        "step": P(),
+        "master": tree_specs(opt_state["master"]),
+        "m": tree_specs(opt_state["m"]),
+        "v": tree_specs(opt_state["v"]),
+    }
+
+
+# --------------------------------------------------------------------------
+# Batch / cache specs
+# --------------------------------------------------------------------------
+def batch_specs(batch, data_axes: Tuple[str, ...], mesh: Optional[Mesh] = None):
+    d = data_axes if len(data_axes) > 1 else data_axes[0]
+    dsize = (int(np.prod([mesh.shape[a] for a in data_axes]))
+             if mesh is not None else 1)
+
+    def one(leaf):
+        if mesh is not None and leaf.shape[0] % dsize != 0:
+            return P(*([None] * leaf.ndim))      # e.g. global_batch=1 decode
+        out = [d] + [None] * (leaf.ndim - 1)
+        return P(*out)
+    return jax.tree.map(one, batch)
+
+
+def cache_specs(cache, cfg, mesh: Mesh, data_axes: Tuple[str, ...],
+                model_axis: str = "model"):
+    """Decode-cache specs (see policy above).  Works on the pytree from
+    ``transformer.init_decode_cache`` / ``input_specs``."""
+    d = data_axes if len(data_axes) > 1 else data_axes[0]
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+    m = model_axis
+
+    def one(path, leaf):
+        key = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        stacked = "groups" in key
+        i0 = 1 if stacked else 0        # index of batch dim
+        entries: list = [None] * leaf.ndim
+        if shape[i0] % dsize == 0:
+            entries[i0] = d
+        leafname = key.replace("']['", "/").strip("[']").split("/")[-1]
+        if leafname in ("k", "v"):
+            # (..., B, S, kvH, hd): kv-heads over model if divisible, else seq
+            kvh = shape[i0 + 2]
+            if _divisible(kvh, mesh, m):
+                entries[i0 + 2] = m
+            elif _divisible(shape[i0 + 1], mesh, m):
+                entries[i0 + 1] = m
+        elif leafname == "h":            # rglru state (..., B, W)
+            if _divisible(shape[-1], mesh, m):
+                entries[-1] = m
+        elif leafname == "conv":         # (..., B, K-1, width)
+            if _divisible(shape[-1], mesh, m):
+                entries[-1] = m
+        elif leafname == "ssm":          # (..., B, H, P, N)
+            if _divisible(shape[i0 + 1], mesh, m):
+                entries[i0 + 1] = m
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def make_ctx(mesh: Optional[Mesh]) -> ShardCtx:
+    if mesh is None:
+        return ShardCtx(mesh=None, data_axes=(), model_axis=None)
+    axes = tuple(mesh.axis_names)
+    data_axes = tuple(a for a in axes if a != "model")
+    return ShardCtx(mesh=mesh, data_axes=data_axes, model_axis="model")
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,94 @@
+"""Single-token (decode) GQA attention Pallas TPU kernel — flash-decoding.
+
+One new query token per sequence attends to a long KV cache:
+  grid = (batch * kv_heads, kv_blocks)            (kv innermost)
+  q block   (1, G, d)      VMEM — all G query heads sharing this kv head
+  k/v block (1, bk, d)     VMEM
+  scratch   acc (G, d) f32, m (G,) f32, l (G,) f32
+
+The cache validity length is passed as a scalar-prefetch-style (B, 1)
+int32 array so ragged caches (each sequence decoded to a different
+position) mask correctly.  This kernel is the serve_step hot spot for the
+decode_32k / long_500k cells.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            bk: int, n_kv: int, scale: float):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    valid_len = len_ref[0, 0]
+    k_start = ki * bk
+
+    @pl.when(k_start < valid_len)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (G, d)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < valid_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, lengths, *, softmax_scale=None, bk: int = 512,
+                     interpret: bool = False):
+    """q (BHkv, G, d) one token per sequence, grouped by kv head;
+    k, v (BHkv, Skv, d); lengths (BHkv, 1) int32 — valid cache length.
+    Returns (BHkv, G, d)."""
+    BH, G, d = q.shape
+    _, Skv, _ = k.shape
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    bk = min(bk, Skv)
+    assert Skv % bk == 0
+    n_kv = Skv // bk
+    kernel = functools.partial(_kernel, bk=bk, n_kv=n_kv, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bh, ki: (bh, 0)),
+            pl.BlockSpec((1, G, d), lambda bh, ki: (bh, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, d), lambda bh, ki: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, G, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, d), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, q, k, v)

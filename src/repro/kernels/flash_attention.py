@@ -1,0 +1,129 @@
+"""Flash attention (prefill) Pallas TPU kernel.
+
+Online-softmax attention with explicit VMEM tiling:
+  grid = (batch * q_heads, q_blocks, kv_blocks)   (kv innermost)
+  q block   (1, bq, d)   VMEM
+  k/v block (1, bk, d)   VMEM, indexed to the matching GQA kv head
+  scratch   acc (bq, d) f32, m (bq,) f32, l (bq,) f32 — persist across the
+            kv grid dimension (canonical TPU flash pattern).
+
+Causal and sliding-window masks are applied per tile; tiles entirely
+outside the mask are skipped with ``pl.when`` (no MXU work issued).
+GQA is handled in the k/v index_map (kv_head = q_head // group), so no
+materialized head repetition.
+
+Hardware alignment: bq/bk default 512/512; d must be padded to a multiple
+of 128 by the ops.py wrapper (MXU lane width).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            bq: int, bk: int, n_kv: int, causal: bool, window: int,
+            kv_len: int, scale: float, group: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # tile bounds in token coordinates
+    q_start = qi * bq
+    k_start = ki * bk
+    # causal: skip tiles fully above the diagonal; window: skip tiles fully
+    # left of every query's window.
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + bq - 1)
+    if window:
+        run = jnp.logical_and(run, k_start + bk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                     # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                     # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    kv_len: int | None = None, softmax_scale=None,
+                    bq: int = 512, bk: int = 512, interpret: bool = False):
+    """q (BHq, Sq, d); k, v (BHkv, Skv, d); BHq = B*Hq with Hq % Hkv == 0.
+
+    Layout note: callers fold (batch, head) into the leading dim with head
+    minor, i.e. index = b * H + h, so the GQA index map is
+    kv_index = (bh // Hq) * Hkv + (bh % Hq) // group.
+    """
+    BHq, Sq, d = q.shape
+    BHkv, Skv, _ = k.shape
+    assert BHq % BHkv == 0
+    group_total = BHq // BHkv  # Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    n_q, n_kv = Sq // bq, Skv // bk
+    kv_len = Skv if kv_len is None else kv_len
+
+    kernel = functools.partial(
+        _kernel, bq=bq, bk=bk, n_kv=n_kv, causal=causal, window=window,
+        kv_len=kv_len, scale=scale, group=group_total)
+
+    def kv_index(bh, qi, ki):
+        return (bh // group_total, ki, 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BHq, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BHq, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,52 @@
+"""Per-row symmetric int8 quantization Pallas TPU kernel.
+
+Quantizes boundary activations before they leave the pod (the paper's §7
+"quantize the tensors we send" refinement, as a fused on-device kernel so
+the fp32/bf16 activation never round-trips through HBM at full width).
+
+  grid = (row_blocks,)
+  x block (br, d) VMEM -> q block (br, d) int8 + scale block (br, 1) f32
+
+Symmetric per-row scaling: q = round(x / s * 127), s = max|row|.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    s = jnp.max(jnp.abs(x), axis=1, keepdims=True) / 127.0
+    s = jnp.maximum(s, 1e-12)
+    q = jnp.clip(jnp.round(x / s), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = s
+
+
+def int8_quantize(x, *, br: int = 256, interpret: bool = False):
+    """x (T, d) -> (q (T, d) int8, scales (T, 1) f32)."""
+    T, d = x.shape
+    br = min(br, T)
+    assert T % br == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(T // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, d), jnp.int8),
+            jax.ShapeDtypeStruct((T, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+def int8_dequantize(q, scales):
+    return q.astype(jnp.float32) * scales

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, kv_len=None,
+                        softmax_scale=None):
+    """Same layout as kernels.flash_attention: q (BHq,Sq,d), k/v (BHkv,Skv,d)."""
+    BHq, Sq, d = q.shape
+    BHkv, Skv, _ = k.shape
+    group = BHq // BHkv
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    kv_len = Skv if kv_len is None else kv_len
+    qg = q.reshape(BHkv, group, Sq, d).astype(jnp.float32)
+    s = jnp.einsum("bgqd,bkd->bgqk", qg, k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = k_pos < kv_len
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgqk,bkd->bgqd", p, v.astype(jnp.float32))
+    return o.reshape(BHq, Sq, d).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, *, softmax_scale=None):
+    """q (BHkv,G,d); k/v (BHkv,Skv,d); lengths (BHkv,1)."""
+    BH, G, d = q.shape
+    Skv = k.shape[1]
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    s = jnp.einsum("bgd,bkd->bgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(Skv)[None, :] < lengths            # (BH, Skv)
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgk,bkd->bgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def rglru_scan_ref(a, b, h0=None):
+    from repro.models.rglru import lru_scan_ref
+    return lru_scan_ref(a, b, h0)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, *, chunk_size=128, init_state=None):
+    from repro.models.ssd import ssd_chunked_ref
+    return ssd_chunked_ref(x, dt, A, Bm, Cm, chunk_size=chunk_size,
+                           init_state=init_state)
+
+
+def int8_quantize_ref(x):
+    xf = x.astype(jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(xf), axis=1, keepdims=True) / 127.0,
+                    1e-12)
+    q = jnp.clip(jnp.round(xf / s), -127, 127).astype(jnp.int8)
+    return q, s

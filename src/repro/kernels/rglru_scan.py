@@ -1,0 +1,65 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel.
+
+h_t = a_t * h_{t-1} + b_t, per channel, fp32.
+
+  grid = (batch, channel_blocks, time_blocks)     (time innermost)
+  a/b block (1, bt, bc)  VMEM
+  scratch   h (1, bc) f32 — the carried state across time blocks
+
+Within a block the recurrence is stepped sequentially with a fori_loop
+over rows (VPU elementwise work; a time step is O(bc) FMA, so the kernel
+is memory-bound and the block shape is chosen to keep the (bt, bc) tiles
+streaming through VMEM).  The pure-jnp oracle is
+``repro.models.rglru.lru_scan_ref`` (associative scan).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, o_ref, h_ref, *, bt: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)[None]
+
+    def step(t, h):
+        a_t = a_ref[0, t, :].astype(jnp.float32)
+        b_t = b_ref[0, t, :].astype(jnp.float32)
+        h = a_t * h + b_t
+        o_ref[0, t, :] = h
+        return h
+
+    h = jax.lax.fori_loop(0, bt, step, h_ref[0])
+    h_ref[...] = h[None]
+
+
+def rglru_scan(a, b, h0=None, *, bt: int = 256, bc: int = 512,
+               interpret: bool = False):
+    """a, b (B, S, W) fp32; h0 (B, W) fp32 or None.  Returns h (B, S, W)."""
+    B, S, W = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+    bt = min(bt, S)
+    bc = min(bc, W)
+    assert S % bt == 0 and W % bc == 0
+    kernel = functools.partial(_kernel, bt=bt)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, W // bc, S // bt),
+        in_specs=[
+            pl.BlockSpec((1, bt, bc), lambda bi, ci, ti: (bi, ti, ci)),
+            pl.BlockSpec((1, bt, bc), lambda bi, ci, ti: (bi, ti, ci)),
+            pl.BlockSpec((1, bc), lambda bi, ci, ti: (bi, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, bc), lambda bi, ci, ti: (bi, ti, ci)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bc), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)

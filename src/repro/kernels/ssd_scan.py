@@ -1,0 +1,113 @@
+"""Mamba-2 SSD chunked-scan Pallas TPU kernel.
+
+Implements the state-space-duality algorithm with explicit VMEM tiling:
+
+  grid = (batch, heads, chunks)                   (chunks innermost)
+  x  block (1, Q, 1, P)    dt block (1, Q, 1)
+  B/C block (1, Q, 1, N)   (GQA-style group mapping h -> h // (H/G))
+  scratch  state (P, N) f32 — carried across the chunk grid dimension
+
+Per chunk (all MXU work on (Q,Q), (Q,P), (P,N) tiles):
+  intra:  M = (C B^T ∘ exp(segsum(dA)) ∘ dt_j) @ x
+  inter:  y += exp(cum) * (C @ state)
+  state:  state = exp(sum dA) * state + (decay_to_end * dt * B)^T @ x
+
+Oracle: ``repro.models.ssd.ssd_chunked_ref`` (pure jnp).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, st_ref, o_ref, fin_ref,
+            s_ref, *, Q: int, n_chunks: int):
+    hi = pl.program_id(1)
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = st_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # (Q,)
+    A = a_ref[0]                                       # scalar (per head)
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)         # (Q, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)         # (Q, N)
+
+    dA = dt * A                                        # (Q,) negative
+    cum = jnp.cumsum(dA)                               # (Q,)
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j
+    seg = cum[:, None] - cum[None, :]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1))
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    M = scores * L * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # inter-chunk: contribution of the carried state
+    state = s_ref[...]
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[0, :, 0, :] = y.astype(o_ref.dtype)
+    # state update
+    decay_to_end = jnp.exp(cum[-1] - cum)              # (Q,)
+    wB = Bm * (decay_to_end * dt)[:, None]             # (Q, N)
+    new_state = (jnp.exp(cum[-1]) * state
+                 + jax.lax.dot_general(x, wB, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32))
+    s_ref[...] = new_state
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        fin_ref[0, 0] = new_state.astype(fin_ref.dtype)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk_size: int = 128, init_state=None,
+             interpret: bool = False):
+    """x (b,s,h,p) f32; dt (b,s,h) f32; A (h,) f32; Bm/Cm (b,s,g,n) f32.
+
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).  Same contract as
+    ``repro.models.ssd.ssd_chunked_ref``.
+    """
+    b, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk_size, S)
+    assert S % Q == 0
+    n_chunks = S // Q
+    if init_state is None:
+        init_state = jnp.zeros((b, H, P, N), jnp.float32)
+    # state carried via input + separate final output (grid-sequential)
+    st_in = init_state
+    kernel = functools.partial(_kernel, Q=Q, n_chunks=n_chunks)
+    y, final = pl.pallas_call(
+        kernel,
+        grid=(b, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, Q, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, Q, 1, N), lambda bi, hi, ci: (bi, ci, hi // rep, 0)),
+            pl.BlockSpec((1, Q, 1, N), lambda bi, hi, ci: (bi, ci, hi // rep, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((b, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm, st_in)
+    return y, final

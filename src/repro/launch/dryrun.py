@@ -1,0 +1,358 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as a module entry point; the first two lines below force 512
+host platform devices BEFORE any jax initialization — do not import this
+module from code that already initialized jax with real devices, except
+for the pure-shape helpers (input_specs etc.), which are import-safe.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                      # all cells, both meshes
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --cell train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod-only --out dryrun.jsonl
+"""
+import os
+
+if __name__ == "__main__":  # set BEFORE jax init (guarded for import-safety)
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPE_CELLS, cell_by_name, get_config
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tr
+from repro.train.optimizer import AdamWConfig, apply_updates, init_opt_state
+
+
+# --------------------------------------------------------------------------
+# Shape-only input builders (ShapeDtypeStruct: no allocation)
+# --------------------------------------------------------------------------
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def param_shapes(cfg):
+    return jax.eval_shape(lambda: tr.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def batch_shapes(cfg, batch: int, seq: int) -> Dict[str, Any]:
+    """Training/prefill batch ShapeDtypeStructs for one architecture."""
+    out: Dict[str, Any] = {}
+    if cfg.encoder_layers:
+        enc_len = min(cfg.frontend.num_positions if cfg.frontend else 1024,
+                      seq)
+        out["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        out["frontend"] = jax.ShapeDtypeStruct(
+            (batch, enc_len, cfg.frontend.embed_dim if cfg.frontend
+             else cfg.d_model), jnp.float32)
+    elif cfg.frontend is not None:
+        P = cfg.frontend.num_positions
+        out["tokens"] = jax.ShapeDtypeStruct((batch, seq - P), jnp.int32)
+        out["frontend"] = jax.ShapeDtypeStruct(
+            (batch, P, cfg.frontend.embed_dim), jnp.float32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    out["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    out["mask"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return out
+
+
+def decode_input_shapes(cfg, batch: int, seq: int):
+    cache = jax.eval_shape(
+        lambda: tr.init_decode_cache(cfg, batch, seq))
+    if cfg.encoder_layers:
+        enc_len = cfg.frontend.num_positions if cfg.frontend else 1024
+        enc_out = jax.ShapeDtypeStruct(
+            (batch, enc_len, cfg.d_model), jnp.bfloat16)
+        params = param_shapes(cfg)
+        cache["enc_kv"] = jax.eval_shape(
+            lambda p, e: tr.build_enc_kv(p, e, cfg), params, enc_out)
+    token = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    position = jax.ShapeDtypeStruct((), jnp.int32)
+    return token, cache, position
+
+
+def input_specs(arch: str, cell_name: str):
+    """Public API: ShapeDtypeStruct stand-ins for every model input."""
+    cfg = get_config(arch)
+    cell = cell_by_name(cell_name)
+    if cell.kind in ("train", "prefill"):
+        return batch_shapes(cfg, cell.global_batch, cell.seq_len)
+    return decode_input_shapes(cfg, cell.global_batch, cell.seq_len)
+
+
+def cell_supported(cfg, cell) -> Tuple[bool, str]:
+    if cell.name == "long_500k" and not cfg.is_sub_quadratic():
+        return False, "SKIP(full-attn): 524k decode needs sub-quadratic state"
+    return True, ""
+
+
+# --------------------------------------------------------------------------
+# Step builders (jit + shardings)
+# --------------------------------------------------------------------------
+def build_train_step(cfg, mesh, opt_cfg: Optional[AdamWConfig] = None,
+                     n_micro: int = 1, grad_shardings=None,
+                     micro_mode: str = "accum"):
+    """Training step with gradient-accumulation microbatching.
+
+    micro_mode="accum": per-microbatch value_and_grad with an fp32
+    accumulator carried at `grad_shardings` (ZeRO-1 specs).  Each
+    microbatch's gradients are reduced over data before the add —
+    simple, but pays n_micro gradient reductions per step.
+
+    micro_mode="loss": the microbatch scan lives INSIDE the
+    differentiated function (each iteration under jax.checkpoint);
+    gradients accumulate in the backward scan carry and the cross-data
+    reduction happens ONCE at the end — n_micro x less gradient
+    collective traffic.
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+    ctx = shd.make_ctx(mesh)
+
+    def loss_fn(p, mb):
+        loss, _ = tr.train_forward(p, mb, cfg, ctx)
+        return loss
+
+    def _split(batch):
+        return jax.tree.map(
+            lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                + x.shape[1:]), batch)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        elif micro_mode == "loss":
+            def total_loss(p):
+                def body(acc, mb):
+                    return acc + loss_fn(p, mb), None
+                body_r = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable)
+                total, _ = jax.lax.scan(
+                    body_r, jnp.zeros((), jnp.float32), _split(batch))
+                return total / n_micro
+            loss, grads = jax.value_and_grad(total_loss)(params)
+        else:
+            # accumulate in fp32 by default; REPRO_GRAD_REDUCE_DTYPE=bf16
+            # reduces each microbatch's gradients at wire width (the
+            # fp32 master update still happens in the optimizer)
+            acc_dt = (jnp.bfloat16
+                      if os.environ.get("REPRO_GRAD_REDUCE_DTYPE") == "bf16"
+                      else jnp.float32)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            if grad_shardings is not None:
+                g0 = jax.lax.with_sharding_constraint(g0, grad_shardings)
+
+            def micro_body(carry, mb):
+                acc_loss, acc_g = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                acc_g = jax.tree.map(
+                    lambda a, g: a + g.astype(acc_dt), acc_g, grads)
+                if grad_shardings is not None:
+                    acc_g = jax.lax.with_sharding_constraint(
+                        acc_g, grad_shardings)
+                return (acc_loss + loss, acc_g), None
+
+            (loss, grads), _ = jax.lax.scan(
+                micro_body, (jnp.zeros((), jnp.float32), g0), _split(batch))
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+        params2, opt_state2, _ = apply_updates(opt_cfg, params, grads,
+                                               opt_state)
+        return params2, opt_state2, loss
+
+    return train_step, ctx
+
+
+def build_prefill_step(cfg, mesh):
+    ctx = shd.make_ctx(mesh)
+
+    def prefill_step(params, batch):
+        logits, cache = tr.prefill(params, batch, cfg, ctx)
+        return logits, cache
+
+    return prefill_step, ctx
+
+
+def build_decode_step(cfg, mesh):
+    ctx = shd.make_ctx(mesh)
+
+    def decode(params, token, cache, position):
+        return tr.decode_step(params, token, cache, position, cfg, ctx)
+
+    return decode, ctx
+
+
+# --------------------------------------------------------------------------
+# Lower + compile one cell
+# --------------------------------------------------------------------------
+def lower_cell(arch: str, cell_name: str, mesh,
+               cfg_override=None) -> Tuple[Any, Any]:
+    """Returns (lowered, compiled) for the cell on `mesh`.
+
+    cfg_override: optional ModelConfig replacing the registry config
+    (perf variants, e.g. int8 KV cache).
+    """
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    cell = cell_by_name(cell_name)
+    ctx = shd.make_ctx(mesh)
+    data_axes = ctx.data_axes
+    pshapes = param_shapes(cfg)
+    pspecs = shd.param_specs(pshapes, cfg, mesh)
+
+    with mesh:
+        if cell.kind == "train":
+            batch = batch_shapes(cfg, cell.global_batch, cell.seq_len)
+            oshapes = jax.eval_shape(init_opt_state, pshapes)
+            ospecs = shd.opt_state_specs(oshapes, pspecs, mesh, data_axes)
+            bspecs = shd.batch_specs(batch, data_axes, mesh)
+            n_micro = int(os.environ.get("REPRO_TRAIN_MICROBATCHES", "8"))
+            micro_mode = os.environ.get("REPRO_MICROBATCH_MODE", "accum")
+            step, _ = build_train_step(
+                cfg, mesh, n_micro=n_micro, micro_mode=micro_mode,
+                grad_shardings=shd.named(mesh, ospecs["master"]))
+            jf = jax.jit(
+                step,
+                in_shardings=(shd.named(mesh, pspecs),
+                              shd.named(mesh, ospecs),
+                              shd.named(mesh, bspecs)),
+                out_shardings=(shd.named(mesh, pspecs),
+                               shd.named(mesh, ospecs), None),
+                donate_argnums=(0, 1))
+            lowered = jf.lower(pshapes, oshapes, batch)
+        elif cell.kind == "prefill":
+            batch = batch_shapes(cfg, cell.global_batch, cell.seq_len)
+            bspecs = shd.batch_specs(batch, data_axes, mesh)
+            step, _ = build_prefill_step(cfg, mesh)
+            out_shapes = jax.eval_shape(step, pshapes, batch)
+            logit_spec = shd.batch_specs(
+                {"l": out_shapes[0]}, data_axes, mesh)["l"]
+            ocache_specs = shd.cache_specs(out_shapes[1], cfg, mesh,
+                                           data_axes)
+            jf = jax.jit(
+                step,
+                in_shardings=(shd.named(mesh, pspecs),
+                              shd.named(mesh, bspecs)),
+                out_shardings=(shd.named(mesh, {"l": logit_spec})["l"],
+                               shd.named(mesh, ocache_specs)))
+            lowered = jf.lower(pshapes, batch)
+        else:  # decode
+            token, cache, position = decode_input_shapes(
+                cfg, cell.global_batch, cell.seq_len)
+            cspecs = shd.cache_specs(cache, cfg, mesh, data_axes)
+            tspec = shd.batch_specs({"t": token}, data_axes, mesh)["t"]
+            step, _ = build_decode_step(cfg, mesh)
+            out_shapes = jax.eval_shape(step, pshapes, token, cache,
+                                        position)
+            logit_spec = shd.batch_specs(
+                {"l": out_shapes[0]}, data_axes, mesh)["l"]
+            jf = jax.jit(
+                step,
+                in_shardings=(shd.named(mesh, pspecs),
+                              shd.named(mesh, {"t": tspec})["t"],
+                              shd.named(mesh, cspecs), None),
+                out_shardings=(shd.named(mesh, {"l": logit_spec})["l"],
+                               shd.named(mesh, cspecs)),
+                donate_argnums=(2,))
+            lowered = jf.lower(pshapes, token, cache, position)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def analyze_cell(arch: str, cell_name: str, mesh, multi_pod: bool,
+                 hlo_dir: Optional[str] = None):
+    from repro.roofline.analysis import roofline_from_compiled
+    t0 = time.time()
+    lowered, compiled = lower_cell(arch, cell_name, mesh)
+    dt = time.time() - t0
+    if hlo_dir:
+        import gzip
+        os.makedirs(hlo_dir, exist_ok=True)
+        tag = "2x16x16" if multi_pod else "16x16"
+        path = os.path.join(hlo_dir, f"{arch}__{cell_name}__{tag}.hlo.gz")
+        with gzip.open(path, "wt") as f:
+            f.write(compiled.as_text())
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    roof = roofline_from_compiled(arch, cell_name, lowered, compiled,
+                                  n_chips=int(np.prod(list(mesh.shape.values()))))
+    rec = {
+        "arch": arch,
+        "cell": cell_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "OK",
+        "compile_s": round(dt, 1),
+        "bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "flops_per_device": cost.get("flops") if cost else None,
+        **roof,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--out", default="dryrun.jsonl")
+    ap.add_argument("--save-hlo", default=None,
+                    help="directory to save compiled HLO text (gz) per cell")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    cells = [args.cell] if args.cell else [c.name for c in SHAPE_CELLS]
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append((False, make_production_mesh(multi_pod=False)))
+    if not args.single_pod_only:
+        meshes.append((True, make_production_mesh(multi_pod=True)))
+
+    results = []
+    with open(args.out, "a") as f:
+        for arch in archs:
+            cfg = get_config(arch)
+            for cell_name in cells:
+                cell = cell_by_name(cell_name)
+                ok, reason = cell_supported(cfg, cell)
+                if not ok:
+                    rec = {"arch": arch, "cell": cell_name, "status": reason}
+                    print(json.dumps(rec))
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                    continue
+                for multi_pod, mesh in meshes:
+                    try:
+                        rec = analyze_cell(arch, cell_name, mesh, multi_pod,
+                                           hlo_dir=args.save_hlo)
+                    except Exception as e:  # a failure here is a bug
+                        rec = {
+                            "arch": arch, "cell": cell_name,
+                            "mesh": "2x16x16" if multi_pod else "16x16",
+                            "status": f"FAIL: {type(e).__name__}: {e}",
+                        }
+                        traceback.print_exc()
+                    print(json.dumps(rec))
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                    results.append(rec)
+    n_fail = sum("FAIL" in str(r.get("status")) for r in results)
+    print(f"\n{len(results)} cells run, {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,54 @@
+"""Training launcher: `python -m repro.launch.train --arch smollm-135m`.
+
+On this CPU host it trains the reduced config end-to-end (see
+examples/train_lm.py for the narrated version); on a real TPU slice pass
+--full to use the registry config and --mesh to pick data/model degrees.
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config, reduced_config
+from repro.data.pipeline import DataConfig
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_loop import TrainConfig, TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--data-parallel", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else reduced_config(args.arch)
+    mesh = make_host_mesh(args.data_parallel, args.model_parallel)
+    ctx = shd.make_ctx(mesh) if mesh.size > 1 else None
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    global_batch=args.batch)
+    tc = TrainConfig(
+        optimizer=AdamWConfig(peak_lr=args.lr, warmup_steps=20,
+                              total_steps=args.steps),
+        checkpoint_dir=args.ckpt_dir, checkpoint_every=100, log_every=10)
+    kwargs = {"ctx": ctx} if ctx is not None else {}
+    loop = TrainLoop(cfg, dc, tc, **kwargs)
+    _, _, hist = loop.run(args.steps)
+    for h in hist:
+        print(f"step {h['step']:5d} loss {h['loss']:.4f} "
+              f"gnorm {h['grad_norm']:.3f} lr {h['lr']:.2e}")
+    print(f"\n{cfg.name}: loss {hist[0]['loss']:.3f} -> "
+          f"{hist[-1]['loss']:.3f} over {args.steps} steps on "
+          f"mesh {dict(mesh.shape)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: pure-JAX models with pytree params.
+
+Submodules: common, attention, mlp, moe, rglru, ssd, transformer (decoder-
+only + enc-dec), regnet (paper's CNN), diffusion (paper's latent diffusion).
+"""

@@ -1,0 +1,97 @@
+"""Shared neural-net primitives: norms, RoPE, initializers, dtype policy.
+
+All models in the zoo are pure-JAX: parameters are nested dicts of
+``jnp.ndarray`` (pytrees), every forward function is ``f(params, x, cfg)``.
+Compute dtype is bfloat16 with fp32 islands for norms/softmax/logits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}
+
+
+def pdtype(cfg) -> jnp.dtype:
+    return DTYPES[cfg.param_dtype]
+
+
+# --------------------------------------------------------------------------
+# Initializers
+# --------------------------------------------------------------------------
+def dense_init(key, shape, dtype, fan_in: int | None = None):
+    """Truncated-normal scaled by 1/sqrt(fan_in) (fan_in = shape[0] default)."""
+    fan = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / np.sqrt(max(1, fan))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def init_norm(cfg, d: int):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def apply_norm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Misc
+# --------------------------------------------------------------------------
+def count_params(params) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree_util.tree_leaves(params)))
+
+
+def param_bytes(params) -> int:
+    return int(
+        sum(np.prod(x.shape) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(params))
+    )
+
+
+def assert_finite(tree, where: str = "") -> None:
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        arr = np.asarray(leaf)
+        if not np.all(np.isfinite(arr.astype(np.float32))):
+            raise FloatingPointError(f"non-finite values at {where}{jax.tree_util.keystr(path)}")

@@ -1,0 +1,36 @@
+"""Dense FFN variants: SwiGLU (llama-family), GELU, squared-ReLU (nemotron)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, pdtype, split_keys
+
+
+def init_mlp(key, cfg, d: int | None = None, f: int | None = None):
+    d = d or cfg.d_model
+    f = f or cfg.d_ff
+    dt = pdtype(cfg)
+    if cfg.activation == "swiglu":
+        k1, k2, k3 = split_keys(key, 3)
+        return {
+            "wi_gate": dense_init(k1, (d, f), dt),
+            "wi_up": dense_init(k2, (d, f), dt),
+            "wo": dense_init(k3, (f, d), dt),
+        }
+    k1, k2 = split_keys(key, 2)
+    return {"wi": dense_init(k1, (d, f), dt), "wo": dense_init(k2, (f, d), dt)}
+
+
+def apply_mlp(p, x, cfg):
+    if cfg.activation == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["wi_gate"])
+        u = jnp.einsum("...d,df->...f", x, p["wi_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["wi"])
+        if cfg.activation == "relu2":
+            h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+        else:  # gelu
+            h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])

@@ -1,0 +1,169 @@
+"""RegNet-Y in pure JAX (NCHW) — the paper's image-classification model.
+
+Matches torchvision ``regnet_y_128gf`` structurally: stem 3x3/2, four stages
+of Y-bottleneck blocks (1x1 -> grouped 3x3 -> SE -> 1x1, residual), head
+avgpool + fc.  BatchNorm runs in inference mode (folded running stats),
+matching the paper's deployment (pretrained weights, no finetuning).
+
+Split points (paper Table 1): stem, block1..block4, avgpool.  Each returns
+the activation the cloud would ship to the device at that point;
+``split_activations`` computes their exact byte sizes via jax.eval_shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+
+SPLIT_POINTS = ("stem", "block1", "block2", "block3", "block4", "avgpool")
+
+
+# --------------------------------------------------------------------------
+# Primitives (NCHW)
+# --------------------------------------------------------------------------
+def conv2d(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        feature_group_count=groups,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def init_conv(key, c_in, c_out, k, groups=1):
+    fan = c_in // groups * k * k
+    return dense_init(key, (c_out, c_in // groups, k, k), jnp.float32, fan_in=fan)
+
+
+def init_bn(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def bn(p, x):
+    return x * p["scale"][:, None, None] + p["bias"][:, None, None]
+
+
+def relu(x):
+    return jax.nn.relu(x)
+
+
+# --------------------------------------------------------------------------
+# Y block
+# --------------------------------------------------------------------------
+def init_yblock(key, c_in, c_out, stride, group_width, se_ratio):
+    ks = split_keys(key, 6)
+    groups = max(1, c_out // group_width)
+    c_se = max(1, int(c_in * se_ratio))
+    p = {
+        "conv1": init_conv(ks[0], c_in, c_out, 1), "bn1": init_bn(c_out),
+        "conv2": init_conv(ks[1], c_out, c_out, 3, groups), "bn2": init_bn(c_out),
+        "se_fc1": init_conv(ks[2], c_out, c_se, 1),
+        "se_fc2": init_conv(ks[3], c_se, c_out, 1),
+        "conv3": init_conv(ks[4], c_out, c_out, 1), "bn3": init_bn(c_out),
+    }
+    if stride != 1 or c_in != c_out:
+        p["proj"] = init_conv(ks[5], c_in, c_out, 1)
+        p["proj_bn"] = init_bn(c_out)
+    return p
+
+
+def apply_yblock(p, x, s: int, g: int):
+    h = relu(bn(p["bn1"], conv2d(x, p["conv1"])))
+    h = relu(bn(p["bn2"], conv2d(h, p["conv2"], stride=s, groups=g)))
+    # squeeze-and-excite
+    z = jnp.mean(h, axis=(2, 3), keepdims=True)
+    z = relu(conv2d(z, p["se_fc1"]))
+    z = jax.nn.sigmoid(conv2d(z, p["se_fc2"]))
+    h = h * z
+    h = bn(p["bn3"], conv2d(h, p["conv3"]))
+    sc = x
+    if "proj" in p:
+        sc = bn(p["proj_bn"], conv2d(x, p["proj"], stride=s))
+    return relu(h + sc)
+
+
+# --------------------------------------------------------------------------
+# Model
+# --------------------------------------------------------------------------
+def init_params(cfg, key) -> Dict[str, Any]:
+    ks = split_keys(key, 2 + len(cfg.widths))
+    params: Dict[str, Any] = {
+        "stem_conv": init_conv(ks[0], 3, cfg.stem_width, 3),
+        "stem_bn": init_bn(cfg.stem_width),
+    }
+    c_in = cfg.stem_width
+    for i, (w, d) in enumerate(zip(cfg.widths, cfg.depths)):
+        blocks = []
+        for j in range(d):
+            bk = jax.random.fold_in(ks[1 + i], j)
+            blocks.append(init_yblock(
+                bk, c_in if j == 0 else w, w, 2 if j == 0 else 1,
+                cfg.group_width, cfg.se_ratio))
+            c_in = w
+        params[f"stage{i + 1}"] = blocks
+    params["fc"] = dense_init(ks[-1], (cfg.widths[-1], cfg.num_classes),
+                              jnp.float32)
+    params["fc_bias"] = jnp.zeros((cfg.num_classes,))
+    return params
+
+
+def run_from(params, cfg, x, start: str = "input", stop: str = "logits"):
+    """Run from split point `start` (x = activation there) to `stop`.
+
+    This IS the paper's RegNet segmentation: the cloud runs
+    run_from(input -> p), ships the activation, the device runs
+    run_from(p -> logits).
+    """
+    order = ("input",) + SPLIT_POINTS + ("logits",)
+    assert start in order and stop in order
+    si, ei = order.index(start), order.index(stop)
+
+    def seg_stem(x):
+        return relu(bn(params["stem_bn"],
+                       conv2d(x, params["stem_conv"], stride=2)))
+
+    def make_stage(i):
+        w = cfg.widths[i - 1]
+        groups = max(1, w // cfg.group_width)
+
+        def f(x):
+            for j, bp in enumerate(params[f"stage{i}"]):
+                x = apply_yblock(bp, x, 2 if j == 0 else 1, groups)
+            return x
+        return f
+
+    segments = {
+        "stem": seg_stem,
+        "block1": make_stage(1), "block2": make_stage(2),
+        "block3": make_stage(3), "block4": make_stage(4),
+        "avgpool": lambda x: jnp.mean(x, axis=(2, 3), keepdims=True),
+        "logits": lambda x: jnp.einsum(
+            "bc,co->bo", x[:, :, 0, 0], params["fc"]) + params["fc_bias"],
+    }
+    for name in order[si + 1: ei + 1]:
+        x = segments[name](x)
+    return x
+
+
+def forward(params, cfg, images):
+    """images (B, 3, H, W) -> logits (B, num_classes)."""
+    return run_from(params, cfg, images, "input", "logits")
+
+
+def split_activations(cfg) -> List[Tuple[str, Tuple[int, ...], int]]:
+    """(split point, activation shape, bytes) for batch 1 — paper Table 1."""
+    x = jax.ShapeDtypeStruct((1, 3, cfg.image_size, cfg.image_size),
+                             jnp.float32)
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    out = []
+    prev = "input"
+    act = x
+    for name in SPLIT_POINTS:
+        act = jax.eval_shape(
+            lambda p, a, _prev=prev, _name=name: run_from(p, cfg, a, _prev, _name),
+            params, act)
+        out.append((name, tuple(act.shape),
+                    int(act.size) * act.dtype.itemsize))
+        prev = name
+    return out

@@ -1,0 +1,137 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block:  x -> [gate branch: Linear -> GeLU] * [rec branch: Linear ->
+causal depthwise conv1d -> RG-LRU] -> Linear out.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(blockdiag(W_a) u_t + b_a)          recurrence gate
+    i_t = sigmoid(blockdiag(W_x) u_t + b_x)          input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The sequence dimension is processed with ``jax.lax.associative_scan``
+(the recurrence h_t = a_t h_{t-1} + b_t is associative), which is also the
+oracle for the Pallas kernel ``repro.kernels.rglru_scan``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, pdtype, split_keys
+
+
+def init_rglru_block(key, cfg):
+    r = cfg.rglru
+    d = cfg.d_model
+    w = r.lru_width or d
+    nb = r.diag_blocks
+    bs = w // nb
+    dt = pdtype(cfg)
+    ks = split_keys(key, 7)
+    # Lambda init so that a^(1/r) spans roughly [0.9, 0.999]
+    lam_min, lam_max = 0.9, 0.999
+    u = jax.random.uniform(ks[5], (w,), jnp.float32)
+    a_init = lam_min + u * (lam_max - lam_min)
+    log_a = jnp.log(a_init)                     # target log a at r=1
+    lam = jnp.log(jnp.expm1(-log_a / r.c_constant))  # inverse softplus
+    return {
+        "w_rec_in": dense_init(ks[0], (d, w), dt),
+        "w_gate_in": dense_init(ks[1], (d, w), dt),
+        "conv_w": dense_init(ks[2], (r.d_conv, w), dt, fan_in=r.d_conv),
+        "wa": dense_init(ks[3], (nb, bs, bs), dt, fan_in=bs),
+        "wx": dense_init(ks[4], (nb, bs, bs), dt, fan_in=bs),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "bx": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "w_out": dense_init(ks[6], (w, d), dt),
+    }
+
+
+def _blockdiag(u, w):
+    """u (..., nb*bs) @ blockdiag w (nb, bs, bs) -> (..., nb*bs)."""
+    nb, bs, _ = w.shape
+    ub = u.reshape(u.shape[:-1] + (nb, bs))
+    yb = jnp.einsum("...nb,nbc->...nc", ub, w)
+    return yb.reshape(u.shape)
+
+
+def _causal_depthwise_conv(x, conv_w, prefix=None):
+    """x (B,S,W), conv_w (K,W); causal: y_t = sum_k w_k x_{t-K+1+k}.
+
+    prefix: optional (B,K-1,W) left context (decode / split-boundary state).
+    """
+    K = conv_w.shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prefix, x], axis=1)
+    y = jnp.zeros_like(x)
+    S = x.shape[1]
+    for k in range(K):
+        y = y + conv_w[k] * jax.lax.dynamic_slice_in_dim(xp, k, S, axis=1)
+    return y
+
+
+def _lru_gates(p, u, c_constant):
+    r_gate = jax.nn.sigmoid(_blockdiag(u, p["wa"]).astype(jnp.float32) + p["ba"])
+    i_gate = jax.nn.sigmoid(_blockdiag(u, p["wx"]).astype(jnp.float32) + p["bx"])
+    log_a = -c_constant * jax.nn.softplus(p["lam"]) * r_gate       # (B,S,W) fp32
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.square(a), 1e-12, None)) * (
+        i_gate * u.astype(jnp.float32))
+    return a, b
+
+
+def lru_scan_ref(a, b, h0=None):
+    """Associative scan of h_t = a_t h_{t-1} + b_t over axis=1.  fp32."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def apply_rglru_block(p, x, cfg, state=None, kernel_fn=None):
+    """x (B,S,d) -> (y (B,S,d), new_state).
+
+    state: {"h": (B,W) fp32, "conv": (B,K-1,W)} carried across segments /
+    decode steps (also the boundary state shipped by the paper's split).
+    """
+    r = cfg.rglru
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, p["w_gate_in"]).astype(jnp.float32))
+    u_pre = jnp.einsum("bsd,dw->bsw", x, p["w_rec_in"])
+    prefix = state["conv"] if state is not None else None
+    u = _causal_depthwise_conv(u_pre, p["conv_w"], prefix)
+    with jax.named_scope("rglru_kernel"):
+        # TPU path: kernels.rglru_scan streams (a, b, h) through VMEM;
+        # the fp32 gate/state tensors never round-trip HBM.
+        a, b = _lru_gates(p, u, r.c_constant)
+        h0 = state["h"] if state is not None else None
+        scan = kernel_fn if kernel_fn is not None else lru_scan_ref
+        h = scan(a, b, h0)                                         # (B,S,W) fp32
+        y = (h * gate).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+    K = p["conv_w"].shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((x.shape[0], K - 1, u_pre.shape[-1]), u_pre.dtype)
+    new_state = {
+        "h": h[:, -1],
+        # conv state carries the *pre-conv* inputs (the conv's left context)
+        "conv": jnp.concatenate([prefix, u_pre], axis=1)[:, -(K - 1):],
+    }
+    return out, new_state
+
+
+def init_rglru_state(batch: int, cfg):
+    r = cfg.rglru
+    w = r.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, r.d_conv - 1, w), pdtype(cfg)),
+    }

@@ -1,0 +1,222 @@
+"""Split-serving engines: the paper's system, executing real JAX models.
+
+``DiffusionSplitEngine`` — iteration-granularity split (the paper's main
+system).  The cloud runs denoising iterations [0, n_final) for each
+request, batched within n_final groups (the n_step quantization is what
+makes groups batchable AND bounds the number of compiled executables),
+then ships (latent fp32 + context fp16) through the transport layer.
+
+``LayerSplitEngine`` — layer-granularity split for every LM architecture
+in the zoo (the generalization of the paper's RegNet Table 1 splitting):
+cloud runs pattern groups [0, g), ships the hidden boundary, the device
+finishes [g, G) + the LM head.
+
+Both engines measure their own executable-cache size, GPU-seconds and
+bytes shipped, which the benchmarks aggregate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_model import CostParams, quantize_step, solve_n_cloud
+from repro.core.telemetry import DeviceProfile
+from repro.core.transport import (
+    LinkProfile,
+    WAN_LINK,
+    pack_boundary,
+    transmission_time,
+    unpack_boundary,
+)
+from repro.models import diffusion as dif
+from repro.models import transformer as tr
+from repro.models.moe import LOCAL_CTX
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: str
+    device: DeviceProfile
+    cond_tokens: np.ndarray          # (1, text_len)
+    uncond_tokens: np.ndarray
+
+
+@dataclasses.dataclass
+class SplitResult:
+    request_id: str
+    n_cloud: int
+    payload: bytes
+    cloud_seconds: float
+    transfer_seconds: float
+
+
+class DiffusionSplitEngine:
+    def __init__(self, params, cfg, cost: CostParams,
+                 link: LinkProfile = WAN_LINK, transfer_mode: str = "paper"):
+        self.params = params
+        self.cfg = cfg
+        self.cost = cost
+        self.link = link
+        self.transfer_mode = transfer_mode
+        self._exec_cache: Dict[Tuple[int, int], Any] = {}
+        self.stats = {"gpu_seconds": 0.0, "bytes_shipped": 0,
+                      "requests": 0, "executables": 0}
+
+    # -- executable cache: one compiled program per (n_final, batch) -------
+    def _denoise_fn(self, n_cloud: int, batch: int):
+        key = (n_cloud, batch)
+        if key not in self._exec_cache:
+            cfg = self.cfg
+
+            def fn(params, latent, ctx2):
+                return dif.denoise_range(params, cfg, latent, ctx2, 0,
+                                         n_cloud)
+            self._exec_cache[key] = jax.jit(fn)
+            self.stats["executables"] = len(self._exec_cache)
+        return self._exec_cache[key]
+
+    def assign(self, device: DeviceProfile) -> int:
+        n = solve_n_cloud(device.r_dev, self.cost, device.rtt)
+        return quantize_step(n, self.cost.n_step, self.cost.n_total)
+
+    def process_group(self, requests: List[Request], n_cloud: int,
+                      seed: int = 0) -> List[SplitResult]:
+        """Run one batched group at the same n_cloud."""
+        if not requests:
+            return []
+        cfg = self.cfg
+        B = len(requests)
+        cond = jnp.asarray(np.concatenate([r.cond_tokens for r in requests]))
+        uncond = jnp.asarray(
+            np.concatenate([r.uncond_tokens for r in requests]))
+        ctx2 = dif.encode_prompt(self.params, cfg, cond, uncond)
+        latent = jax.random.normal(
+            jax.random.PRNGKey(seed),
+            (B, cfg.latent_channels, cfg.latent_size, cfg.latent_size))
+        t0 = time.perf_counter()
+        if n_cloud > 0:
+            latent = self._denoise_fn(n_cloud, B)(self.params, latent, ctx2)
+            latent.block_until_ready()
+        gpu_s = time.perf_counter() - t0
+        results = []
+        lat_np = np.asarray(latent, np.float32)
+        ctx_np = np.asarray(ctx2, np.float32)
+        for i, r in enumerate(requests):
+            need_ctx = n_cloud < cfg.n_total_iterations
+            payload = pack_boundary(
+                lat_np[i], ctx_np[:, i] if need_ctx else None,
+                mode=self.transfer_mode)
+            t_net = transmission_time(len(payload), self.link)
+            results.append(SplitResult(
+                request_id=r.request_id, n_cloud=n_cloud, payload=payload,
+                cloud_seconds=gpu_s / B, transfer_seconds=t_net))
+            self.stats["bytes_shipped"] += len(payload)
+        self.stats["gpu_seconds"] += gpu_s
+        self.stats["requests"] += B
+        return results
+
+    def serve(self, requests: List[Request], seed: int = 0
+              ) -> Dict[str, SplitResult]:
+        """Schedule + group + execute a batch of requests."""
+        groups: Dict[int, List[Request]] = {}
+        for r in requests:
+            groups.setdefault(self.assign(r.device), []).append(r)
+        out: Dict[str, SplitResult] = {}
+        for n_cloud, members in sorted(groups.items()):
+            for res in self.process_group(members, n_cloud, seed):
+                out[res.request_id] = res
+        return out
+
+
+class DiffusionDeviceSim:
+    """The mobile side: receives the payload, finishes [n_cloud, n_total)
+    and decodes the VAE — on the same host, standing in for the device."""
+
+    def __init__(self, params, cfg):
+        self.params = params
+        self.cfg = cfg
+        self._finish_cache: Dict[Tuple[int, int], Any] = {}
+
+    def complete(self, result: SplitResult):
+        cfg = self.cfg
+        lat, ctx = unpack_boundary(result.payload)
+        latent = jnp.asarray(lat)[None] if lat.ndim == 3 else jnp.asarray(lat)
+        n0 = result.n_cloud
+        key = (n0, latent.shape[0])
+        if key not in self._finish_cache:
+            def fn(params, latent, ctx2):
+                out = dif.denoise_range(params, cfg, latent, ctx2, n0,
+                                        cfg.n_total_iterations)
+                return dif.apply_vae_decoder(params["vae"], cfg, out)
+            self._finish_cache[key] = jax.jit(fn)
+        if ctx is not None:
+            ctx2 = jnp.asarray(ctx)[:, None] if ctx.ndim == 3 else jnp.asarray(ctx)
+        else:
+            ctx2 = jnp.zeros((2, latent.shape[0], cfg.text_len,
+                              cfg.text_width), jnp.float32)
+        return self._finish_cache[key](self.params, latent, ctx2)
+
+
+# ==========================================================================
+# Layer-granularity split for LM architectures
+# ==========================================================================
+class LayerSplitEngine:
+    """Cloud side of a layer split: embed + groups [0, g), ship hidden."""
+
+    def __init__(self, params, cfg, link: LinkProfile = WAN_LINK):
+        self.params = params
+        self.cfg = cfg
+        self.link = link
+        self._exec_cache: Dict[int, Any] = {}
+        self.stats = {"bytes_shipped": 0, "requests": 0}
+
+    def _run_fn(self, stop_group: int):
+        if stop_group not in self._exec_cache:
+            cfg = self.cfg
+
+            def fn(params, batch):
+                x = tr.embed_inputs(params, batch, cfg)
+                positions = jnp.arange(x.shape[1])
+                return tr.run_layer_range(
+                    params, x, cfg, LOCAL_CTX, start_group=0,
+                    stop_group=stop_group, positions=positions)
+            self._exec_cache[stop_group] = jax.jit(fn)
+        return self._exec_cache[stop_group]
+
+    def process(self, batch: Dict[str, np.ndarray], stop_group: int):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        hidden = self._run_fn(stop_group)(self.params, batch)
+        payload = np.asarray(hidden, np.float32).astype(np.float16)
+        self.stats["bytes_shipped"] += payload.nbytes
+        self.stats["requests"] += batch["tokens"].shape[0]
+        t_net = transmission_time(payload.nbytes, self.link)
+        return payload, t_net
+
+
+class LayerSplitDevice:
+    """Device side: groups [g, G) + tail + head."""
+
+    def __init__(self, params, cfg):
+        self.params = params
+        self.cfg = cfg
+        self._exec_cache: Dict[int, Any] = {}
+
+    def complete(self, hidden_fp16: np.ndarray, start_group: int):
+        cfg = self.cfg
+        if start_group not in self._exec_cache:
+            def fn(params, hidden):
+                positions = jnp.arange(hidden.shape[1])
+                x = tr.run_layer_range(
+                    params, hidden, cfg, LOCAL_CTX, start_group=start_group,
+                    stop_group=cfg.num_groups(), positions=positions)
+                x = tr.apply_norm(params["final_norm"], x)
+                return tr.unembed(params, x[:, -1:], cfg)
+            self._exec_cache[start_group] = jax.jit(fn)
+        from repro.models.common import pdtype
+        hidden = jnp.asarray(hidden_fp16).astype(pdtype(cfg))
+        return self._exec_cache[start_group](self.params, hidden)

@@ -1,0 +1,120 @@
+"""1000-device fleet simulation — reproduces paper §5.4–§5.6.
+
+CALIBRATION (paper does not state t_lim / n_step / k_decode; see
+DESIGN.md §8): t_lim=8.5 s, n_step=5, k_decode=2.0 lands within ~2% of
+every Table 4 entry with the paper's stated constants (r_cloud=62.5 it/s
+RTX4090, fleet ~ N(2.25, 0.28) from iPhone12mini..M2-iPad, t_net=0.3 s,
+n_total=50, c_batch=1.6 measured at batch 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.cost_model import CostParams
+from repro.core.scheduler import (
+    AllCloudScheduler,
+    ConstantIterationScheduler,
+    IntelligentBatchingScheduler,
+    ScheduleSummary,
+    VariableIterationScheduler,
+)
+from repro.core.telemetry import DeviceProfile, generate_fleet, upgrade_fleet
+
+CALIBRATED = CostParams(r_cloud=62.5, n_total=50, n_step=5, t_lim=8.5,
+                        k_decode=2.0, c_batch=1.6)
+SLOWEST_DEVICE = 1.44          # iPhone 12 mini (paper §5.4)
+FASTEST_DEVICE = 3.07          # M2 iPad Pro
+C_BATCH = 1.6                  # paper §5.5 (batch of 2 on A40)
+
+PROJECTION = CostParams(r_cloud=40.0, n_total=50, n_step=5, t_lim=20.0,
+                        k_decode=2.0, c_batch=1.6)
+
+
+@dataclasses.dataclass
+class Table4Row:
+    scheduler: str
+    cloud_gpu_time: float
+    paper_value: Optional[float]
+    violations: int
+    batched_fraction: float
+
+
+def run_table4(n_devices: int = 1000, seed: int = 0,
+               params: CostParams = CALIBRATED,
+               rtt: float = 0.3) -> Dict[str, ScheduleSummary]:
+    fleet = generate_fleet(n_devices, 2.25, 0.28, seed=seed, rtt=rtt,
+                           k_decode=params.k_decode)
+    return run_schedulers(fleet, params)
+
+
+def run_schedulers(fleet: List[DeviceProfile],
+                   params: CostParams) -> Dict[str, ScheduleSummary]:
+    worst = min(d.r_dev for d in fleet)
+    worst = max(worst, SLOWEST_DEVICE * 0.9)
+    scheds = {
+        "all_cloud": AllCloudScheduler(params),
+        "constant": ConstantIterationScheduler(
+            params, worst_r_dev=SLOWEST_DEVICE, worst_rtt=fleet[0].rtt),
+        "variable": VariableIterationScheduler(params),
+        "variable+batching": IntelligentBatchingScheduler(
+            params, c_batch=params.c_batch),
+    }
+    return {name: s.summarize(fleet) for name, s in scheds.items()}
+
+
+def table4(n_devices: int = 1000, seed: int = 0) -> List[Table4Row]:
+    paper = {"all_cloud": 800.0, "constant": 720.0, "variable": 600.96,
+             "variable+batching": 487.06}
+    out = []
+    for name, summ in run_table4(n_devices, seed).items():
+        out.append(Table4Row(
+            scheduler=name, cloud_gpu_time=summ.total_gpu_time,
+            paper_value=paper.get(name), violations=summ.violations,
+            batched_fraction=summ.batched_fraction))
+    return out
+
+
+# --------------------------------------------------------------------------
+# §5.5 batching-cost sweep (paper Fig 14)
+# --------------------------------------------------------------------------
+def batching_cost_sweep(costs, n_devices: int = 1000, seed: int = 0,
+                        params: CostParams = CALIBRATED):
+    fleet = generate_fleet(n_devices, 2.25, 0.28, seed=seed, rtt=0.3,
+                           k_decode=params.k_decode)
+    rows = []
+    for c in costs:
+        s = IntelligentBatchingScheduler(params, c_batch=c).summarize(fleet)
+        rows.append({"c_batch": float(c),
+                     "batchable_fraction": s.batched_fraction,
+                     "cloud_gpu_time": s.total_gpu_time})
+    return rows
+
+
+# --------------------------------------------------------------------------
+# §5.6 projection scenarios (paper Figs 16-20)
+# --------------------------------------------------------------------------
+def projection_scenarios(n_devices: int = 1000, seed: int = 0):
+    """Three fleets: base N(1.0, 0.1); 50% upgraded to 1.5; then 80% of
+    remaining 1.0-class and 20% of 1.5-class upgraded to 2.0."""
+    p = PROJECTION
+    base = generate_fleet(n_devices, 1.0, 0.1, seed=seed, rtt=0.5,
+                          k_decode=p.k_decode)
+    f2 = upgrade_fleet(base, 0.5, 1.5, 0.15, seed=seed + 1)
+    f3 = upgrade_fleet(f2, 0.8, 2.0, 0.2, seed=seed + 2,
+                       eligible=lambda d: d.r_dev < 1.25)
+    f3 = upgrade_fleet(f3, 0.2, 2.0, 0.2, seed=seed + 3,
+                       eligible=lambda d: 1.25 <= d.r_dev < 1.8)
+    out = {}
+    for name, fleet in (("base", base), ("upgrade_1.5", f2),
+                        ("upgrade_2.0", f3)):
+        res = run_schedulers(fleet, p)
+        allc = res["all_cloud"].total_gpu_time
+        out[name] = {
+            "rates": [d.r_dev for d in fleet],
+            "summaries": res,
+            "ratios": {k: v.total_gpu_time / allc for k, v in res.items()},
+        }
+    return out

@@ -1,0 +1,109 @@
+"""AdamW with fp32 master weights, built for sharded pytrees.
+
+Mixed-precision contract:
+  * model params are bf16 (compute dtype),
+  * optimizer state holds fp32 master weights + fp32 m/v,
+  * each step updates masters and re-casts to bf16 params.
+
+ZeRO-1: the optimizer state's sharding specs are derived by
+``distributed.sharding.zero1_specs`` (adds the data axis on a free
+dimension of every leaf), so the fp32 state never replicates across data —
+GSPMD turns the gradient all-reduce into reduce-scatter + all-gather.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    """Linear warmup -> cosine decay to min_lr_ratio * peak."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.peak_lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    # copy=True: fp32 leaves must NOT alias the param buffers (donation)
+    f32 = lambda t: jax.tree.map(
+        lambda x: jnp.array(x, dtype=jnp.float32, copy=True), t)
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": f32(params),
+        "m": zeros(params),
+        "v": zeros(params),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state,
+                  decay_mask=None) -> Tuple[Any, Dict[str, Any], Dict[str, Any]]:
+    """One AdamW step.  Returns (new bf16 params, new state, metrics)."""
+    step = state["step"]
+    lr = lr_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        master_new = master - lr * (delta + cfg.weight_decay * master
+                                    * _decayable(master))
+        return m_new, v_new, master_new
+
+    def _decayable(x):
+        # decay matrices only (skip norms/biases/1-d gains)
+        return jnp.float32(x.ndim >= 2)
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+    flat_w = jax.tree_util.tree_leaves(state["master"])
+    new_m, new_v, new_w = [], [], []
+    for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w):
+        mn, vn, wn = upd(g, m, v, w)
+        new_m.append(mn)
+        new_v.append(vn)
+        new_w.append(wn)
+    new_state = {
+        "step": step + 1,
+        "m": jax.tree_util.tree_unflatten(tdef, new_m),
+        "v": jax.tree_util.tree_unflatten(tdef, new_v),
+        "master": jax.tree_util.tree_unflatten(tdef, new_w),
+    }
+    new_params = jax.tree.map(
+        lambda w, p: w.astype(p.dtype), new_state["master"], params)
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, metrics

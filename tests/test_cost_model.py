@@ -1,0 +1,97 @@
+"""Property-based tests (hypothesis) for the paper's cost model."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import (
+    CostParams,
+    batchable,
+    c_batch_of,
+    e2e_latency,
+    fit_batch_model,
+    quantize_step,
+    solve_n_cloud,
+)
+
+params_st = st.builds(
+    CostParams,
+    r_cloud=st.floats(5.0, 200.0),
+    n_total=st.integers(10, 100),
+    n_step=st.integers(1, 10),
+    t_lim=st.floats(1.0, 60.0),
+    k_decode=st.floats(0.0, 5.0),
+    c_batch=st.just(1.0),
+)
+rdev_st = st.floats(0.1, 10.0)
+rtt_st = st.floats(0.0, 2.0)
+
+
+@given(params_st, rdev_st, rtt_st)
+@settings(max_examples=200, deadline=None)
+def test_solver_meets_sla_when_feasible(p, r_dev, rtt):
+    """If all-cloud meets the SLA, the solver's n_cloud meets the SLA."""
+    n = solve_n_cloud(r_dev, p, rtt)
+    all_cloud_ok = e2e_latency(p.n_total, r_dev, p, rtt) <= p.t_lim
+    if all_cloud_ok:
+        assert e2e_latency(n, r_dev, p, rtt) <= p.t_lim + 1e-6
+
+
+@given(params_st, rdev_st, rtt_st)
+@settings(max_examples=200, deadline=None)
+def test_solver_minimality(p, r_dev, rtt):
+    """n_cloud is the MINIMUM cloud work: any fewer iterations (when the
+    cloud is faster than the device) violates the SLA."""
+    n = solve_n_cloud(r_dev, p, rtt)
+    assert 0.0 <= n <= p.n_total
+    cloud_faster = p.r_cloud > r_dev
+    if 1.0 <= n < p.n_total and cloud_faster:
+        assert e2e_latency(n - 1.0, r_dev, p, rtt) > p.t_lim - 1e-6
+
+
+@given(params_st, st.floats(0.5, 9.0), rtt_st, st.floats(0.01, 1.0))
+@settings(max_examples=200, deadline=None)
+def test_solver_monotone_in_device_rate(p, r_dev, rtt, delta):
+    """A faster device never needs MORE cloud iterations."""
+    n_slow = solve_n_cloud(r_dev, p, rtt)
+    n_fast = solve_n_cloud(r_dev + delta, p, rtt)
+    assert n_fast <= n_slow + 1e-9
+
+
+@given(params_st, rdev_st, rtt_st, st.floats(0.01, 2.0))
+@settings(max_examples=200, deadline=None)
+def test_solver_monotone_in_rtt(p, r_dev, rtt, extra):
+    """Worse network never reduces the cloud work needed."""
+    assert solve_n_cloud(r_dev, p, rtt + extra) >= solve_n_cloud(
+        r_dev, p, rtt) - 1e-9
+
+
+@given(st.floats(0, 99.9), st.integers(1, 10), st.integers(10, 100))
+@settings(max_examples=200, deadline=None)
+def test_quantize_bounds(n, step, total):
+    n = min(n, float(total))
+    q = quantize_step(n, step, total)
+    assert q >= math.floor(min(n, total)) or q == total
+    assert q <= total
+    assert q >= n - 1e-9 or q == total
+    if 0 < q < total:
+        assert q % step == 0
+
+
+@given(params_st, rdev_st, rtt_st, st.floats(1.0, 4.0))
+@settings(max_examples=200, deadline=None)
+def test_batchable_is_sound(p, r_dev, rtt, c_batch):
+    """Admitted-to-batch requests still meet the SLA at the batched rate."""
+    n = quantize_step(solve_n_cloud(r_dev, p, rtt), p.n_step, p.n_total)
+    if batchable(n, r_dev, p, rtt, c_batch):
+        assert e2e_latency(n, r_dev, p, rtt, c_batch) <= p.t_lim + 1e-6
+
+
+@given(st.floats(0.001, 1.0), st.floats(0.001, 1.0))
+@settings(max_examples=100, deadline=None)
+def test_batch_model_fit_recovers_params(t_startup, t_task):
+    sizes = [1, 2, 4, 8]
+    times = [t_startup + t_task * b for b in sizes]
+    s, t = fit_batch_model(sizes, times)
+    assert abs(s - t_startup) < 1e-6 * max(1, t_startup)
+    assert abs(t - t_task) < 1e-6 * max(1, t_task)
+    assert c_batch_of(1, s, t) == 1.0

@@ -1,0 +1,91 @@
+"""Dry-run machinery that is testable without 512 devices: input specs,
+skip policy, FLOPs model, data prefetcher."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPE_CELLS, cell_by_name, get_config
+from repro.launch.dryrun import (
+    batch_shapes,
+    cell_supported,
+    decode_input_shapes,
+    input_specs,
+)
+from repro.roofline.analysis import model_flops, roofline_terms, dominant_term
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("cell_name",
+                         [c.name for c in SHAPE_CELLS])
+def test_input_specs_shapes(arch, cell_name):
+    cfg = get_config(arch)
+    cell = cell_by_name(cell_name)
+    ok, reason = cell_supported(cfg, cell)
+    if not ok:
+        assert "SKIP" in reason
+        return
+    specs = input_specs(arch, cell_name)
+    leaves = jax.tree_util.tree_leaves(specs)
+    assert leaves, (arch, cell_name)
+    for leaf in leaves:
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+    if cell.kind in ("train", "prefill"):
+        total = specs["tokens"].shape[1] + (
+            specs["frontend"].shape[1]
+            if "frontend" in specs and not cfg.encoder_layers else 0)
+        assert total == cell.seq_len
+        assert specs["tokens"].shape[0] == cell.global_batch
+    else:
+        token, cache, position = specs
+        assert token.shape == (cell.global_batch, 1)
+        # SWA caches hold only the window
+        if cfg.attention_kind == "swa" and cfg.window:
+            for path, leaf in jax.tree_util.tree_leaves_with_path(cache):
+                key = jax.tree_util.keystr(path)
+                if key.endswith("['k']") and "enc_kv" not in key:
+                    assert leaf.shape[-3] <= cfg.window
+
+
+def test_long_500k_skip_policy():
+    """Sub-quadratic archs run long_500k; pure full-attention skip."""
+    runs = {a for a in ARCH_IDS
+            if cell_supported(get_config(a), cell_by_name("long_500k"))[0]}
+    assert runs == {"mamba2-780m", "recurrentgemma-9b", "h2o-danube-1.8b"}
+
+
+def test_model_flops_convention():
+    cfg = get_config("qwen2-7b")
+    t = model_flops(cfg, cell_by_name("train_4k"))
+    p = model_flops(cfg, cell_by_name("prefill_32k"))
+    d = model_flops(cfg, cell_by_name("decode_32k"))
+    assert t == 6 * cfg.active_param_count() * 256 * 4096
+    assert p == 2 * cfg.active_param_count() * 32 * 32768
+    assert d == 2 * cfg.active_param_count() * 128
+    # MoE active < total
+    moe = get_config("olmoe-1b-7b")
+    assert moe.active_param_count() < moe.param_count()
+
+
+def test_roofline_terms_and_dominance():
+    terms = roofline_terms(197e12, 819e9, 50e9)   # exactly 1s each
+    assert all(abs(v - 1.0) < 1e-9 for v in terms.values())
+    terms = roofline_terms(1e12, 900e9, 1e9)
+    assert dominant_term(terms) == "memory"
+
+
+def test_prefetcher_sequential():
+    from repro.configs import reduced_config
+    from repro.data.pipeline import DataConfig, Prefetcher, make_batch
+    cfg = reduced_config("smollm-135m")
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2)
+    pf = Prefetcher(cfg, dc, start_step=3, depth=2)
+    try:
+        steps = []
+        for _ in range(3):
+            step, batch = next(pf)
+            steps.append(step)
+            want = make_batch(dc, step)
+            np.testing.assert_array_equal(batch["tokens"], want["tokens"])
+        assert steps == [3, 4, 5]
+    finally:
+        pf.close()

@@ -1,0 +1,116 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+rng = np.random.default_rng(42)
+
+
+def _n(*shape, dtype=np.float32):
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+@pytest.mark.parametrize("B,Sq,Skv,Hq,Hkv,D,causal,win", [
+    (2, 256, 256, 4, 2, 64, True, 0),
+    (1, 128, 384, 8, 8, 128, True, 0),
+    (2, 256, 256, 4, 1, 80, True, 64),      # MQA + window + padded head_dim
+    (1, 128, 128, 2, 2, 128, False, 0),     # non-causal (cross-attn)
+    (1, 512, 512, 3, 3, 64, True, 128),     # odd heads
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, Sq, Skv, Hq, Hkv, D, causal, win, dtype):
+    q = _n(B, Sq, Hq, D, dtype=dtype)
+    k = _n(B, Skv, Hkv, D, dtype=dtype)
+    v = _n(B, Skv, Hkv, D, dtype=dtype)
+    o = ops.flash_attention(q, k, v, causal=causal, window=win, bq=128,
+                            bk=128)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    want = ref.flash_attention_ref(qf, kf, vf, causal=causal, window=win)
+    want = want.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)
+    tol = 5e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("B,Skv,Hq,Hkv,D", [
+    (4, 512, 8, 2, 64), (2, 384, 4, 4, 128), (3, 512, 16, 1, 80),
+])
+def test_decode_attention(B, Skv, Hq, Hkv, D):
+    q = _n(B, 1, Hq, D)
+    k = _n(B, Skv, Hkv, D)
+    v = _n(B, Skv, Hkv, D)
+    lens = jnp.asarray(rng.integers(1, Skv, size=B), jnp.int32)
+    o = ops.decode_attention(q, k, v, lens, bk=128)
+    G = Hq // Hkv
+    qf = q[:, 0].reshape(B, Hkv, G, D).reshape(B * Hkv, G, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    lf = jnp.repeat(lens[:, None], Hkv, 1).reshape(B * Hkv, 1)
+    want = ref.decode_attention_ref(qf, kf, vf, lf).reshape(B, Hq, D)[:, None]
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want), atol=5e-6)
+
+
+@pytest.mark.parametrize("B,S,W", [(2, 128, 256), (1, 512, 128), (3, 96, 200)])
+def test_rglru_scan(B, S, W):
+    a = jnp.asarray(rng.uniform(0.8, 0.999, size=(B, S, W)), jnp.float32)
+    b = _n(B, S, W)
+    h0 = _n(B, W)
+    got = ops.rglru_scan(a, b, h0)
+    want = ref.rglru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("b,S,H,P,G,N,Q", [
+    (1, 256, 4, 64, 1, 128, 128), (2, 128, 8, 64, 2, 64, 64),
+    (1, 512, 2, 32, 1, 16, 128),
+])
+def test_ssd_scan(b, S, H, P, G, N, Q):
+    x = _n(b, S, H, P)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(b, S, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2, size=(H,)), jnp.float32)
+    Bm, Cm = _n(b, S, G, N), _n(b, S, G, N)
+    st = _n(b, H, P, N)
+    y, f = ops.ssd_scan(x, dt, A, Bm, Cm, chunk_size=Q, init_state=st)
+    yr, fr = ref.ssd_scan_ref(x, dt, A, Bm, Cm, chunk_size=Q, init_state=st)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(fr), atol=2e-5)
+
+
+@pytest.mark.parametrize("T,d", [(100, 333), (256, 64), (7, 1024)])
+def test_int8_quantize(T, d):
+    x = _n(T, d)
+    q, s = ops.int8_quantize(x)
+    qr, sr = ref.int8_quantize_ref(x)
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32) - qr.astype(jnp.int32)))) == 0
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    # round-trip error bounded by scale/2 per element
+    back = ops.int8_dequantize(q, s)
+    err = jnp.max(jnp.abs(back - x))
+    assert float(err) <= float(jnp.max(s)) * 0.5 + 1e-6
+
+
+def test_flash_custom_vjp_grads():
+    B, S, Hq, Hkv, D = 2, 256, 4, 2, 64
+    from repro.models import attention as at
+    q, k, v = _n(B, S, Hq, D), _n(B, S, Hkv, D), _n(B, S, Hkv, D)
+    pos = jnp.arange(S)
+
+    def ref_loss(q, k, v):
+        o = at.attention_einsum(q, k, v, q_positions=pos, kv_positions=pos,
+                                causal=True, window=0)
+        return jnp.sum(jnp.tanh(o))
+
+    def flash_loss(q, k, v):
+        return jnp.sum(jnp.tanh(at.flash_self_attention(q, k, v, True, 0, 64)))
+
+    r, gr = jax.value_and_grad(ref_loss, argnums=(0, 1, 2))(q, k, v)
+    f, gf = jax.value_and_grad(flash_loss, argnums=(0, 1, 2))(q, k, v)
+    assert abs(float(r - f)) < 1e-4
+    for a, b in zip(gr, gf):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

@@ -1,0 +1,93 @@
+"""Scheduler invariants (hypothesis) + Table 4 reproduction test."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import CostParams
+from repro.core.scheduler import (
+    AllCloudScheduler,
+    ConstantIterationScheduler,
+    IntelligentBatchingScheduler,
+    VariableIterationScheduler,
+    allocate_gpus,
+)
+from repro.core.telemetry import generate_fleet
+
+params_st = st.builds(
+    CostParams,
+    r_cloud=st.floats(20.0, 100.0),
+    n_total=st.just(50),
+    n_step=st.sampled_from([1, 2, 5, 10]),
+    t_lim=st.floats(5.0, 30.0),
+    k_decode=st.floats(0.0, 3.0),
+    c_batch=st.floats(1.0, 2.5),
+)
+fleet_st = st.builds(
+    generate_fleet,
+    n=st.integers(10, 200),
+    mean=st.floats(0.5, 4.0),
+    std=st.floats(0.01, 0.5),
+    seed=st.integers(0, 5),
+)
+
+
+@given(params_st, fleet_st)
+@settings(max_examples=50, deadline=None)
+def test_scheduler_ordering(p, fleet):
+    """variable <= constant <= all_cloud GPU time; batching <= variable."""
+    allc = AllCloudScheduler(p).summarize(fleet).total_gpu_time
+    worst = min(d.r_dev for d in fleet)
+    const = ConstantIterationScheduler(p, worst_r_dev=worst,
+                                       worst_rtt=fleet[0].rtt)
+    constant = const.summarize(fleet).total_gpu_time
+    variable = VariableIterationScheduler(p).summarize(fleet).total_gpu_time
+    batching = IntelligentBatchingScheduler(
+        p, c_batch=p.c_batch).summarize(fleet).total_gpu_time
+    assert variable <= constant + 1e-6
+    assert constant <= allc + 1e-6
+    assert batching <= variable + 1e-6
+
+
+@given(params_st, fleet_st)
+@settings(max_examples=50, deadline=None)
+def test_no_violations_when_cloud_feasible(p, fleet):
+    """If all-cloud meets every device's SLA, variable violates nothing."""
+    allc = AllCloudScheduler(p).summarize(fleet)
+    if allc.violations == 0:
+        var = VariableIterationScheduler(p).summarize(fleet)
+        assert var.violations == 0
+
+
+@given(params_st, fleet_st)
+@settings(max_examples=30, deadline=None)
+def test_allocation_fractions(p, fleet):
+    summ = VariableIterationScheduler(p).summarize(fleet)
+    plan = allocate_gpus(summ, p, n_gpus=16, horizon_s=60.0)
+    total = sum(plan.fractions.values())
+    if plan.total_workload > 0:
+        assert abs(total - 1.0) < 1e-9
+    assert plan.gpus_needed >= 0
+
+
+def test_table4_reproduction():
+    """Headline numbers within 3% of the paper (calibrated constants)."""
+    from repro.serving.simulator import table4
+    rows = {r.scheduler: r for r in table4(1000, seed=0)}
+    assert abs(rows["all_cloud"].cloud_gpu_time - 800.0) < 1e-6
+    assert abs(rows["constant"].cloud_gpu_time - 720.0) < 1e-6
+    assert abs(rows["variable"].cloud_gpu_time - 600.96) / 600.96 < 0.03
+    assert abs(rows["variable+batching"].cloud_gpu_time - 487.06) / 487.06 < 0.03
+    for r in rows.values():
+        assert r.violations == 0
+
+
+def test_projection_monotone():
+    """Paper §5.6: savings grow as the fleet upgrades."""
+    from repro.serving.simulator import projection_scenarios
+    out = projection_scenarios(500, seed=0)
+    r = [out[k]["ratios"]["variable"] for k in
+         ("base", "upgrade_1.5", "upgrade_2.0")]
+    b = [out[k]["ratios"]["variable+batching"] for k in
+         ("base", "upgrade_1.5", "upgrade_2.0")]
+    assert r[0] > r[1] > r[2]
+    assert b[0] > b[1] > b[2]
+    assert all(bb < rr for bb, rr in zip(b, r))

@@ -1,0 +1,129 @@
+"""Segmentation: split consistency + payload accounting + solver behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import (
+    get_config,
+    reduced_config,
+    regnet_y_128gf,
+    stable_diffusion_v1,
+)
+from repro.core.cost_model import solve_split_fraction
+from repro.core.segmentation import (
+    executable_count,
+    layer_split_points,
+    to_segment_costs,
+)
+from repro.models import diffusion, regnet
+
+
+def test_regnet_split_consistency():
+    """Paper Table 1 mechanism: split at any block == full forward."""
+    rc = regnet_y_128gf.reduced()
+    p = regnet.init_params(rc, jax.random.PRNGKey(0))
+    img = jax.random.normal(jax.random.PRNGKey(1),
+                            (2, 3, rc.image_size, rc.image_size))
+    full = regnet.forward(p, rc, img)
+    for point in regnet.SPLIT_POINTS:
+        mid = regnet.run_from(p, rc, img, "input", point)
+        out = regnet.run_from(p, rc, mid, point, "logits")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(full),
+                                   atol=1e-4)
+
+
+def test_regnet_table1_exact():
+    acts = dict(
+        (n, (s, b)) for n, s, b in
+        regnet.split_activations(regnet_y_128gf.CONFIG))
+    assert acts["stem"][0] == (1, 32, 192, 192)
+    assert acts["stem"][1] == 4608 * 1024
+    assert acts["block2"][0] == (1, 1056, 48, 48)
+    assert acts["avgpool"][0] == (1, 7392, 1, 1)
+
+
+def test_diffusion_table2_exact():
+    pay = dict(diffusion.split_payload(stable_diffusion_v1.CONFIG))
+    # latent fp32 = 64 KiB; context fp16 = 231 KiB; both = 295 KiB
+    assert pay["denoising50"] == 4 * 64 * 64 * 4
+    assert pay["denoising0"] == 2 * 77 * 768 * 2
+    assert pay["denoising25"] == pay["denoising0"] + pay["denoising50"]
+
+
+def test_diffusion_iteration_split_consistency():
+    dc = stable_diffusion_v1.reduced()
+    dp = diffusion.init_params(dc, jax.random.PRNGKey(0))
+    toks = jnp.zeros((1, dc.text_len), jnp.int32)
+    ctx2 = diffusion.encode_prompt(dp, dc, toks, toks)
+    lat = jax.random.normal(jax.random.PRNGKey(3),
+                            (1, dc.latent_channels, dc.latent_size,
+                             dc.latent_size))
+    full = diffusion.denoise_range(dp, dc, lat, ctx2, 0,
+                                   dc.n_total_iterations)
+    for k in range(0, dc.n_total_iterations + 1, dc.split_stride):
+        a = diffusion.denoise_range(dp, dc, lat, ctx2, 0, k)
+        b = diffusion.denoise_range(dp, dc, a, ctx2, k,
+                                    dc.n_total_iterations)
+        np.testing.assert_allclose(np.asarray(b), np.asarray(full),
+                                   atol=1e-5)
+
+
+def test_layer_split_points_accounting():
+    cfg = get_config("qwen2-7b")
+    pts = layer_split_points(cfg, batch=1, seq=2048)
+    assert len(pts) == cfg.num_groups() + 1
+    assert pts[0].cloud_flops == 0.0
+    assert pts[-1].cloud_flops > 0
+    # FLOPs are conserved across split choices (modulo the head term)
+    totals = {round(p.cloud_flops + p.device_flops, 3) for p in pts}
+    assert len(totals) == 1
+    # boundary payload == bf16 hidden states
+    assert pts[1].payload_bytes == 1 * 2048 * cfg.d_model * 2
+
+
+@given(st.floats(1e12, 1e15), st.floats(1e10, 1e13), st.floats(0.0, 0.3),
+       st.floats(1e6, 1e9), st.floats(0.05, 10.0))
+@settings(max_examples=50, deadline=None)
+def test_split_solver_minimizes_cloud_work(cloud_fs, dev_fs, rtt, bw, t_lim):
+    cfg = get_config("qwen2-7b")
+    segs = to_segment_costs(layer_split_points(cfg, 1, 2048))
+    seg, lat = solve_split_fraction(segs, cloud_fs, dev_fs, rtt, bw, t_lim)
+    if seg is not None:
+        assert lat <= t_lim
+        # minimality: any split with less cloud work misses the SLA
+        for other in segs:
+            if other.cloud_flops < seg.cloud_flops:
+                from repro.core.cost_model import segment_latency
+                assert segment_latency(other, cloud_fs, dev_fs, rtt,
+                                       bw) > t_lim - 1e-9
+
+
+def test_regnet_offload_decision():
+    """Paper §5.2.3/§6: with a fast mobile accelerator and ~100ms RTT,
+    offloading RegNet is NOT profitable (solver picks split 0 = all
+    on-device); with a slow device it is."""
+    from repro.core.segmentation import SplitPoint
+    # RegNet ~374.57 GFLOPs forward (paper), boundary from Table 1
+    flops = 374.57e9
+    segs = to_segment_costs([
+        SplitPoint("input", 0, 0, 0.0, flops, ),
+        SplitPoint("stem", 1, 4608 * 1024, 0.05 * flops, 0.95 * flops),
+        SplitPoint("block2", 2, 9504 * 1024, 0.5 * flops, 0.5 * flops),
+        SplitPoint("avgpool", 3, 29 * 1024, 0.99 * flops, 0.01 * flops),
+    ])
+    fast_dev = 10e12   # mobile accelerator ~10 TFLOPS: 37ms local
+    cloud = 100e12
+    seg, _ = solve_split_fraction(segs, cloud, fast_dev, rtt=0.1,
+                                  bandwidth=12.5e6, t_lim=0.15)
+    assert seg is not None and seg.split_index == 0   # don't offload
+    slow_dev = 0.2e12  # no accelerator: 1.9s local -> must offload
+    seg2, _ = solve_split_fraction(segs, cloud, slow_dev, rtt=0.1,
+                                   bandwidth=12.5e6, t_lim=0.5)
+    assert seg2 is not None and seg2.split_index > 0
+
+
+@given(st.integers(1, 100), st.integers(1, 20))
+@settings(max_examples=50, deadline=None)
+def test_executable_count(n_total, n_step):
+    assert executable_count(n_total, n_step) == n_total // n_step + 1

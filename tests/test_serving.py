@@ -1,0 +1,93 @@
+"""End-to-end split-serving tests: split output == monolithic output."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config, stable_diffusion_v1
+from repro.core.cost_model import CostParams
+from repro.core.segmentation import executable_count
+from repro.core.telemetry import DeviceProfile
+from repro.core.transport import LOCAL_LINK
+from repro.models import diffusion
+from repro.models import transformer as tr
+from repro.serving.engine import (
+    DiffusionDeviceSim,
+    DiffusionSplitEngine,
+    LayerSplitDevice,
+    LayerSplitEngine,
+    Request,
+)
+
+
+@pytest.fixture(scope="module")
+def dmodel():
+    cfg = stable_diffusion_v1.reduced()
+    params = diffusion.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_diffusion_split_end_to_end(dmodel):
+    """Cloud [0,n) + device [n,N) + VAE == all on one machine.
+
+    The paper's Fig 9 claim: splitting does not change the output."""
+    cfg, params = dmodel
+    cost = CostParams(r_cloud=10.0, n_total=cfg.n_total_iterations,
+                      n_step=cfg.split_stride, t_lim=5.0, k_decode=1.0)
+    engine = DiffusionSplitEngine(params, cfg, cost, link=LOCAL_LINK)
+    device = DiffusionDeviceSim(params, cfg)
+    toks = np.zeros((1, cfg.text_len), np.int32)
+    req = Request("r", DeviceProfile("d", 5.0), toks, toks)
+    # baseline: everything on one machine with the same seed
+    ctx2 = diffusion.encode_prompt(params, cfg, jnp.asarray(toks),
+                                   jnp.asarray(toks))
+    lat0 = jax.random.normal(jax.random.PRNGKey(0),
+                             (1, cfg.latent_channels, cfg.latent_size,
+                              cfg.latent_size))
+    mono = diffusion.apply_vae_decoder(
+        params["vae"], cfg,
+        diffusion.denoise_range(params, cfg, lat0, ctx2, 0,
+                                cfg.n_total_iterations))
+    for n_cloud in (0, cfg.split_stride * 2, cfg.n_total_iterations):
+        res = engine.process_group([req], n_cloud, seed=0)[0]
+        img = device.complete(res)
+        np.testing.assert_allclose(np.asarray(img), np.asarray(mono),
+                                   atol=2e-2)  # fp16 context on the wire
+
+
+def test_executable_cache_bounded_by_step_grid(dmodel):
+    """The n_step quantization bounds the number of compiled programs —
+    the paper's 'server does not handle diverse requests' claim."""
+    cfg, params = dmodel
+    cost = CostParams(r_cloud=50.0, n_total=cfg.n_total_iterations,
+                      n_step=cfg.split_stride, t_lim=2.0, k_decode=1.0)
+    engine = DiffusionSplitEngine(params, cfg, cost, link=LOCAL_LINK)
+    device_rates = np.linspace(0.5, 8.0, 13)
+    toks = np.zeros((1, cfg.text_len), np.int32)
+    reqs = [Request(f"r{i}", DeviceProfile(f"d{i}", float(r)), toks, toks)
+            for i, r in enumerate(device_rates)]
+    engine.serve(reqs, seed=1)
+    bound = executable_count(cfg.n_total_iterations, cfg.split_stride)
+    assert engine.stats["executables"] <= bound
+    assert engine.stats["requests"] == len(reqs)
+
+
+def test_layer_split_matches_full_forward():
+    cfg = reduced_config("qwen2-7b")
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    toks = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                           cfg.vocab_size))
+    batch = {"tokens": jnp.asarray(toks)}
+    hidden, _, _ = tr.forward_hidden(params, batch, cfg)
+    want = tr.unembed(params, hidden[:, -1:], cfg)
+    engine = LayerSplitEngine(params, cfg, link=LOCAL_LINK)
+    device = LayerSplitDevice(params, cfg)
+    for g in (0, cfg.num_groups() // 2, cfg.num_groups()):
+        payload, t_net = engine.process({"tokens": toks}, g)
+        got = device.complete(payload, g)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=0.15, rtol=0.1)  # fp16 boundary
+        assert t_net > 0

@@ -1,0 +1,137 @@
+"""Sharding rules: spec validity, divisibility policy, ZeRO-1, MoE parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as tr
+from repro.models.moe import ShardCtx, apply_moe
+
+
+def _fake_mesh_16x16():
+    """An AbstractMesh look-alike: only `.shape` is consulted by rules."""
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+    return FakeMesh()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_rank_and_divisibility(arch):
+    cfg = get_config(arch)
+    mesh = _fake_mesh_16x16()
+    pshapes = jax.eval_shape(
+        lambda: tr.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = shd.param_specs(pshapes, cfg, mesh)
+
+    def check(path, leaf, spec):
+        assert isinstance(spec, P)
+        assert len(spec) <= leaf.ndim, (path, spec, leaf.shape)
+        for dim, axis in zip(leaf.shape, tuple(spec)):
+            if axis is None:
+                continue
+            size = (np.prod([mesh.shape[a] for a in axis])
+                    if isinstance(axis, tuple) else mesh.shape[axis])
+            assert dim % size == 0, (jax.tree_util.keystr(path), leaf.shape,
+                                     spec)
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: check(p, l, s), pshapes, specs)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "olmoe-1b-7b", "mamba2-780m"])
+def test_zero1_adds_data_axis(arch):
+    cfg = get_config(arch)
+    mesh = _fake_mesh_16x16()
+    pshapes = jax.eval_shape(
+        lambda: tr.init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = shd.param_specs(pshapes, cfg, mesh)
+    from repro.train.optimizer import init_opt_state
+    oshapes = jax.eval_shape(init_opt_state, pshapes)
+    ospecs = shd.opt_state_specs(oshapes, pspecs, mesh, ("data",))
+    n_data_sharded = 0
+    total = 0
+
+    def count(path, leaf, spec):
+        nonlocal n_data_sharded, total
+        total += 1
+        if any(a == "data" or (isinstance(a, tuple) and "data" in a)
+               for a in tuple(spec) if a is not None):
+            n_data_sharded += 1
+    jax.tree_util.tree_map_with_path(count, oshapes["master"],
+                                     ospecs["master"])
+    # the big leaves (embeddings, matmuls) must pick up the data axis
+    assert n_data_sharded / total > 0.5
+
+
+def test_cache_specs_cover_tree():
+    cfg = get_config("qwen2-7b")
+    mesh = _fake_mesh_16x16()
+    cache = jax.eval_shape(lambda: tr.init_decode_cache(cfg, 128, 4096))
+    specs = shd.cache_specs(cache, cfg, mesh, ("data",))
+    for (pa, leaf), (pb, spec) in zip(
+            jax.tree_util.tree_leaves_with_path(cache),
+            jax.tree_util.tree_leaves_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))):
+        assert len(tuple(spec)) <= leaf.ndim + 1
+
+
+def test_moe_tp_matches_local():
+    """MoE through shard_map on a real (1,1) host mesh == local path."""
+    cfg = reduced_config("granite-moe-3b-a800m")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    from repro.models.moe import init_moe
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
+                          jnp.bfloat16)
+    y_local, aux_local = apply_moe(p, x, cfg)
+    mesh = make_host_mesh(1, 1)
+    ctx = ShardCtx(mesh=mesh, data_axes=("data",), model_axis="model")
+    y_sm, aux_sm = jax.jit(
+        lambda p, x: apply_moe(p, x, cfg, ctx))(p, x)
+    np.testing.assert_allclose(np.asarray(y_local, np.float32),
+                               np.asarray(y_sm, np.float32), atol=1e-2)
+
+
+def test_moe_ep_matches_tp_mode():
+    """EP partitioning (olmoe) == TP partitioning on a 1-device mesh."""
+    cfg = reduced_config("olmoe-1b-7b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    from repro.models.moe import init_moe
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
+                          jnp.bfloat16)
+    mesh = make_host_mesh(1, 1)
+    ctx = ShardCtx(mesh=mesh, data_axes=("data",), model_axis="model")
+    cfg_tp = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, partitioning="tp"))
+    y_ep, _ = jax.jit(lambda p, x: apply_moe(p, x, cfg, ctx))(p, x)
+    y_tp, _ = jax.jit(lambda p, x: apply_moe(p, x, cfg_tp, ctx))(p, x)
+    np.testing.assert_allclose(np.asarray(y_ep, np.float32),
+                               np.asarray(y_tp, np.float32), atol=1e-2)
+
+
+def test_hlo_parser_trip_counts():
+    """The roofline analyzer folds scan trip counts (cost_analysis does
+    not) — validated on a known matmul-in-scan."""
+    from repro.roofline.hlo_parser import analyze
+
+    def g(x, w):
+        def body(c, wi):
+            return c @ wi, None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+    x = jnp.zeros((64, 64))
+    w = jnp.zeros((10, 64, 64))
+    c = jax.jit(g).lower(x, w).compile()
+    r = analyze(c.as_text())
+    assert r["flops"] == 10 * 2 * 64 ** 3
+    raw = c.cost_analysis().get("flops", 0)
+    assert raw < r["flops"]

@@ -1,0 +1,94 @@
+"""Transport property tests: serialization round trip, quantization error
+bounds, lossy channel accounting, transmission-model shape (paper Fig 4)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.transport import (
+    LOCAL_LINK,
+    WAN_LINK,
+    dequantize_int8,
+    deserialize,
+    lossy_transfer,
+    pack_boundary,
+    quantize_int8,
+    serialize,
+    transmission_time,
+    unpack_boundary,
+)
+
+arrays_st = st.sampled_from(
+    [np.float32, np.float16, np.int32, np.uint8]).flatmap(
+    lambda dt: hnp.arrays(
+        dtype=dt,
+        shape=hnp.array_shapes(min_dims=1, max_dims=4, max_side=16),
+        elements={"allow_nan": False},   # NaN != NaN breaks array_equal
+    ))
+
+
+@given(st.dictionaries(st.text(st.characters(categories=("Ll",)),
+                               min_size=1, max_size=8),
+                       arrays_st, min_size=1, max_size=4),
+       st.booleans())
+@settings(max_examples=50, deadline=None)
+def test_serialize_roundtrip(tree, compress):
+    data = serialize(tree, compress=compress)
+    out = deserialize(data)
+    assert set(out) == set(tree)
+    for k in tree:
+        np.testing.assert_array_equal(out[k], tree[k])
+
+
+@given(hnp.arrays(np.float32, hnp.array_shapes(min_dims=1, max_dims=3,
+                                               max_side=32),
+                  elements=st.floats(-100, 100, width=32)))
+@settings(max_examples=100, deadline=None)
+def test_int8_quantization_error_bound(x):
+    q, s, z = quantize_int8(x)
+    back = dequantize_int8(q, s, z)
+    # affine int8: error bounded by half a quantization step
+    assert np.max(np.abs(back - x)) <= s * 0.5 + 1e-5
+
+
+def test_boundary_pack_modes():
+    rng = np.random.default_rng(0)
+    lat = rng.standard_normal((4, 64, 64)).astype(np.float32)
+    ctx = rng.standard_normal((2, 77, 768)).astype(np.float32)
+    paper = pack_boundary(lat, ctx, mode="paper")
+    int8 = pack_boundary(lat, ctx, mode="int8")
+    # paper Table 2: ~296 KB; int8 mode ~4x smaller on the fp32 part
+    assert abs(len(paper) - 296 * 1024) < 4096
+    assert len(int8) < len(paper) / 2
+    l1, c1 = unpack_boundary(paper)
+    np.testing.assert_allclose(l1, lat, atol=1e-6)
+    np.testing.assert_allclose(c1, ctx, atol=2e-3)  # fp16 context
+    l2, c2 = unpack_boundary(int8)
+    assert np.max(np.abs(l2 - lat)) < 0.05  # int8 graceful degradation
+    assert np.corrcoef(l2.ravel(), lat.ravel())[0, 1] > 0.999
+
+
+@given(st.floats(0.0, 0.5), st.integers(0, 3))
+@settings(max_examples=30, deadline=None)
+def test_lossy_transfer_fraction(p, seed):
+    x = np.ones((4096,), np.float32)
+    y, lost = lossy_transfer(x, p, seed=seed)
+    assert 0.0 <= lost <= 1.0
+    np.testing.assert_allclose(np.mean(y == 0.0), lost)
+
+
+@given(st.integers(1, 10_000_000), st.integers(1, 10_000_000))
+@settings(max_examples=100, deadline=None)
+def test_transmission_monotone(a, b):
+    lo, hi = min(a, b), max(a, b)
+    for link in (LOCAL_LINK, WAN_LINK):
+        assert transmission_time(hi, link) >= transmission_time(lo, link)
+
+
+def test_fig4_crossover():
+    """LAN wins small transfers (RTT), WAN wins large (bandwidth)."""
+    small = 500
+    large = 16_000_000
+    assert (transmission_time(small, LOCAL_LINK)
+            < transmission_time(small, WAN_LINK))
+    assert (transmission_time(large, WAN_LINK)
+            < transmission_time(large, LOCAL_LINK))
