@@ -1,0 +1,70 @@
+"""Arrival-rate x policy sweep of the event-driven fleet simulator.
+
+For each (policy, rate) cell: run the continuous simulator over the
+Table-4 fleet, report p99 latency, SLA violation rate, GPU utilization
+and normalized cloud GPU-seconds — plus the per-snapshot time-series
+(p99 / queue depth / GPU count) dumped to JSON for plotting.
+
+    PYTHONPATH=src python -m benchmarks.run fleet_sim_sweep
+    PYTHONPATH=src python -m benchmarks.fleet_sim_sweep out.json   # JSON
+
+The steady-state check (GPU-seconds vs the static Table 4) lives in
+tests/test_fleet_sim.py; this sweep is about what the static model can't
+show: queueing, batching windows, and autoscaler dynamics under load.
+"""
+import json
+import sys
+import time
+
+from repro.serving.fleet_sim import SimConfig, run_fleet_sim
+from repro.serving.simulator import CALIBRATED, POLICIES, table4_fleet
+
+RATES = (5.0, 15.0, 30.0, 60.0)
+DURATION = 120.0
+
+
+def sweep(rates=RATES, policies=POLICIES, duration=DURATION, seed=0):
+    fleet = table4_fleet(seed=seed, params=CALIBRATED)
+    cells = []
+    for policy in policies:
+        for rate in rates:
+            cfg = SimConfig(policy=policy, params=CALIBRATED, rate=rate,
+                            max_rate=max(rates), duration=duration,
+                            seed=seed, fleet=fleet,
+                            gpus_init=max(4, int(rate)), max_gpus=256)
+            res = run_fleet_sim(cfg)
+            cells.append({"policy": policy, "rate": rate,
+                          **res.to_json()})
+    return cells
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    cells = sweep()
+    dt = (time.perf_counter() - t0) * 1e6 / len(cells)
+    for c in cells:
+        viol_rate = c["violations"] / max(1, c["n_completed"])
+        rows.append((
+            f"fleet_sim/{c['policy']}/rate_{c['rate']:g}", dt,
+            f"p99={c['p99_latency']:.2f}s viol={viol_rate:.3f} "
+            f"util={c['utilization']:.2f} "
+            f"gpu_s_per_1000={c['gpu_seconds_per_request'] * 1000:.1f} "
+            f"peak_gpus={c['peak_gpus']}"))
+    return rows
+
+
+def main():
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "fleet_sim_sweep.json"
+    cells = sweep()
+    with open(out_path, "w") as f:
+        json.dump(cells, f, indent=1)
+    print(f"wrote {len(cells)} cells to {out_path}")
+    for c in cells:
+        print(f"{c['policy']:20s} rate={c['rate']:5g} "
+              f"p99={c['p99_latency']:.2f}s viol={c['violations']} "
+              f"util={c['utilization']:.2f} peak_gpus={c['peak_gpus']}")
+
+
+if __name__ == "__main__":
+    main()

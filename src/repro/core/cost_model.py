@@ -129,6 +129,21 @@ def c_batch_of(batch_size: int, t_startup: float, t_task: float) -> float:
     return (t_startup + t_task * batch_size) / (t_startup + t_task)
 
 
+def c_batch_at(c_batch_2: float, batch_size: int) -> float:
+    """Extrapolate the batch-b slowdown from the measured batch-2 value.
+
+    The §4.4 linear micro-model t_batch = t_startup + t_task * b gives
+    c(b) = 1 + (c(2) - 1) * (b - 1); a single batch-2 measurement (the
+    paper's c_batch=1.6) pins the slope.  b == 2 returns the measurement
+    itself (bitwise, so batch-2 paths are unchanged by this helper).
+    """
+    if batch_size <= 1:
+        return 1.0
+    if batch_size == 2:
+        return c_batch_2
+    return 1.0 + (c_batch_2 - 1.0) * (batch_size - 1)
+
+
 # --------------------------------------------------------------------------
 # Layer-granularity generalization (transformers / RegNet)
 # --------------------------------------------------------------------------

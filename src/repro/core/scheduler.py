@@ -22,6 +22,7 @@ from typing import Dict, List, Optional, Sequence
 from repro.core.cost_model import (
     CostParams,
     batchable,
+    c_batch_at,
     cloud_gpu_time,
     e2e_latency,
     quantize_step,
@@ -62,13 +63,29 @@ class ScheduleSummary:
 
 
 class SchedulerBase:
+    """``assign_one`` is the ONLINE surface: one request in, one
+    ``Assignment`` out, no fleet snapshot required — this is what the
+    event-driven fleet simulator calls per arrival.  ``schedule`` is the
+    batch surface over a snapshot (the static Table-4 path); only the
+    intelligent-batching scheduler adds snapshot-wide post-processing
+    there, and its online equivalent lives in ``core.admission``.
+    """
+
     name = "base"
+    #: True when requests within a group may be batched (§4.4) — the
+    #: simulator only opens batching windows for such schedulers.
+    supports_batching = False
 
     def __init__(self, params: CostParams):
         self.p = params
 
     def assign_one(self, prof: DeviceProfile) -> Assignment:
         raise NotImplementedError
+
+    def group_key(self, a: Assignment) -> int:
+        """Batching-group identity (§4.4): requests sharing n_final share
+        a compiled executable and may run in one batch."""
+        return a.n_final
 
     def schedule(self, fleet: Sequence[DeviceProfile]) -> List[Assignment]:
         return [self.assign_one(d) for d in fleet]
@@ -130,12 +147,25 @@ class IntelligentBatchingScheduler(VariableIterationScheduler):
     the plain variable scheduler's.
     """
     name = "variable+batching"
+    supports_batching = True
 
     def __init__(self, params: CostParams, c_batch: float,
                  batch_size: int = 2):
         super().__init__(params)
-        self.c_batch = c_batch
+        # c_batch is measured at batch 2 (paper §5.5); other batch sizes
+        # extrapolate through the §4.4 linear micro-model
+        self.c_batch_measured = c_batch
+        self.c_batch = c_batch_at(c_batch, batch_size)
         self.batch_size = batch_size
+
+    def admission(self):
+        """Online §4.4 admission policy matching this scheduler's batching
+        constants (used by the fleet simulator's batching windows)."""
+        from repro.core.admission import BatchingAdmission
+        # pass the raw batch-2 measurement: BatchingAdmission applies the
+        # same c_batch_at extrapolation itself
+        return BatchingAdmission(self.p, self.c_batch_measured,
+                                 self.batch_size)
 
     def schedule(self, fleet: Sequence[DeviceProfile]) -> List[Assignment]:
         asg = super().schedule(fleet)
@@ -161,14 +191,22 @@ class IntelligentBatchingScheduler(VariableIterationScheduler):
         return asg
 
 
+def group_workloads(n_finals) -> Dict[int, float]:
+    """§4.5 per-group workload w_group = n_task * n_group, aggregated
+    from per-request n_final values — shared by the static summary and
+    the fleet simulator's sliding-horizon autoscaler."""
+    wg: Dict[int, float] = {}
+    for n in n_finals:
+        wg[n] = wg.get(n, 0.0) + n
+    return wg
+
+
 def summarize(name: str, assignments: List[Assignment],
               p: CostParams) -> ScheduleSummary:
     total = sum(a.gpu_time(p) for a in assignments)
     lats = [a.latency for a in assignments]
     viol = sum(not a.feasible for a in assignments)
-    wg: Dict[int, float] = {}
-    for a in assignments:
-        wg[a.n_final] = wg.get(a.n_final, 0.0) + a.n_final
+    wg = group_workloads(a.n_final for a in assignments)
     frac = (sum(a.batched for a in assignments) / max(1, len(assignments)))
     return ScheduleSummary(
         name=name, assignments=assignments, total_gpu_time=total,

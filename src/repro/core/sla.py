@@ -1,8 +1,10 @@
 """SLA policy + adaptive controller (paper §7: tighten when idle, relax
-under load to avoid dropping requests)."""
+under load to avoid dropping requests) + per-request deadline tracking
+for the continuous-serving path."""
 from __future__ import annotations
 
 import dataclasses
+from typing import Dict, Optional
 
 
 @dataclasses.dataclass
@@ -40,3 +42,60 @@ class AdaptiveSLAController:
         t = min(max(t, self.policy.t_floor), self.policy.t_ceil)
         self.policy.t_lim = t
         return t
+
+
+# --------------------------------------------------------------------------
+# Per-request deadlines (fleet simulator / continuous serving)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RequestDeadline:
+    """One request's SLA clock: fixed at arrival (the paper's contract is
+    end-to-end latency from submission, so later SLA-policy changes do not
+    move deadlines of in-flight requests)."""
+    request_id: str
+    arrival: float
+    t_lim: float
+
+    @property
+    def deadline(self) -> float:
+        return self.arrival + self.t_lim
+
+    def slack(self, now: float) -> float:
+        return self.deadline - now
+
+    def violated_at(self, completion: float) -> bool:
+        return completion > self.deadline + 1e-9
+
+
+class DeadlineTracker:
+    """Book-keeping for in-flight deadlines: open at arrival, close at
+    completion; counts violations and exposes the tightest open slack
+    (what an EDF-style dispatcher or an autoscaler would watch)."""
+
+    def __init__(self):
+        self._open: Dict[str, RequestDeadline] = {}
+        self.completed = 0
+        self.violations = 0
+
+    def open(self, request_id: str, arrival: float,
+             t_lim: float) -> RequestDeadline:
+        d = RequestDeadline(request_id, arrival, t_lim)
+        self._open[request_id] = d
+        return d
+
+    def close(self, request_id: str, completion: float) -> bool:
+        """Returns True when the request violated its deadline."""
+        d = self._open.pop(request_id)
+        self.completed += 1
+        late = d.violated_at(completion)
+        if late:
+            self.violations += 1
+        return late
+
+    def in_flight(self) -> int:
+        return len(self._open)
+
+    def min_slack(self, now: float) -> Optional[float]:
+        if not self._open:
+            return None
+        return min(d.slack(now) for d in self._open.values())

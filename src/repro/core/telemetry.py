@@ -8,7 +8,8 @@ the network probe keeps EWMA estimates of RTT/bandwidth per client.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional
+import math
+from typing import Dict, Iterable, Iterator, List, Optional
 
 import numpy as np
 
@@ -89,6 +90,117 @@ def generate_fleet(n: int, mean: float, std: float, seed: int = 0,
                       k_decode=k_decode, rtt=rtt)
         for i, r in enumerate(rates)
     ]
+
+
+# --------------------------------------------------------------------------
+# Arrival processes (fleet simulator): all three are implemented by
+# THINNING a master homogeneous Poisson process at the peak rate.
+# NESTING across rates — a lower-rate stream being a subset of a
+# higher-rate one — holds ONLY for ``poisson_arrivals`` with a shared
+# (seed, max_rate): then the master stream and per-point accept draws
+# are identical and raising the rate only ADDS arrivals.  The
+# monotonicity property tests rely on that coupling; bursty/diurnal
+# streams have rate-dependent masters and are NOT nested.
+# --------------------------------------------------------------------------
+def _thinned_arrivals(peak_rate: float, duration: float, seed: int,
+                      accept_prob) -> Iterator[float]:
+    """Yield arrival times t with P(keep master point at t) =
+    accept_prob(t) in [0, 1]."""
+    if peak_rate <= 0:
+        return                           # zero rate: empty stream
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / peak_rate)
+        u = rng.uniform()             # always drawn: keeps streams coupled
+        if t >= duration:
+            return
+        if u <= accept_prob(t):
+            yield t
+
+
+def poisson_arrivals(rate: float, duration: float, seed: int = 0,
+                     max_rate: Optional[float] = None) -> Iterator[float]:
+    """Homogeneous Poisson arrivals at ``rate`` over [0, duration).
+
+    ``max_rate``: thin from a master process at this rate instead of
+    ``rate`` itself, so streams with equal (seed, max_rate) are nested
+    across different ``rate`` values.
+    """
+    peak = max_rate if max_rate is not None else rate
+    if rate > peak + 1e-12:
+        raise ValueError(f"rate {rate} exceeds max_rate {peak}")
+    frac = rate / peak if peak > 0 else 0.0
+    return _thinned_arrivals(peak, duration, seed, lambda t: frac)
+
+
+def bursty_arrivals(rate: float, duration: float, seed: int = 0,
+                    burst_factor: float = 4.0, on_fraction: float = 0.2,
+                    cycle_s: float = 60.0) -> Iterator[float]:
+    """On/off (flash-crowd) modulated Poisson with mean ``rate``: for the
+    first ``on_fraction`` of each cycle the rate is ``burst_factor * rate``,
+    the remainder runs at the complementary low rate."""
+    if not 0.0 < on_fraction < 1.0:
+        raise ValueError("on_fraction must be in (0, 1)")
+    if burst_factor * on_fraction > 1.0:
+        # the off-phase rate would have to go negative to preserve the
+        # mean — refuse rather than silently exceed `rate`
+        raise ValueError(
+            f"burst_factor * on_fraction = {burst_factor * on_fraction:.2f} "
+            f"> 1: bursts alone exceed the requested mean rate")
+    high = burst_factor * rate
+    low = rate * (1.0 - on_fraction * burst_factor) / (1.0 - on_fraction)
+
+    def lam(t):
+        return high if (t % cycle_s) < on_fraction * cycle_s else low
+    peak = max(high, low)
+    return _thinned_arrivals(peak, duration, seed,
+                             lambda t: lam(t) / peak if peak > 0 else 0.0)
+
+
+def diurnal_arrivals(rate: float, duration: float, seed: int = 0,
+                     period_s: float = 86400.0,
+                     amplitude: float = 0.8) -> Iterator[float]:
+    """Inhomogeneous Poisson with a day-night sinusoid:
+    lambda(t) = rate * (1 + amplitude * sin(2 pi t / period))."""
+    if not 0.0 <= amplitude <= 1.0:
+        raise ValueError("amplitude must be in [0, 1]")
+    peak = rate * (1.0 + amplitude)
+
+    def prob(t):
+        lam = rate * (1.0 + amplitude * math.sin(2.0 * math.pi * t / period_s))
+        return lam / peak if peak > 0 else 0.0
+    return _thinned_arrivals(peak, duration, seed, prob)
+
+
+# --------------------------------------------------------------------------
+# Per-request device sampling (which device does the next request come
+# from?)
+# --------------------------------------------------------------------------
+def fleet_sampler(fleet: List[DeviceProfile], seed: int = 0,
+                  mode: str = "cycle") -> Iterator[DeviceProfile]:
+    """Yield one DeviceProfile per request from a fixed fleet.
+
+    mode "cycle":   deterministic round-robin — after k*len(fleet)
+                    requests the empirical device mix EQUALS the fleet
+                    mix, which is what makes the simulator's steady-state
+                    GPU-seconds converge tightly to the static Table-4
+                    totals.
+    mode "uniform": iid with replacement (the production-realistic mix).
+    """
+    if not fleet:
+        raise ValueError("empty fleet")
+    if mode == "cycle":
+        i = 0
+        while True:
+            yield fleet[i % len(fleet)]
+            i += 1
+    elif mode == "uniform":
+        rng = np.random.default_rng(seed)
+        while True:
+            yield fleet[int(rng.integers(len(fleet)))]
+    else:
+        raise ValueError(f"unknown sampling mode {mode!r}")
 
 
 def upgrade_fleet(fleet: Iterable[DeviceProfile], fraction: float,

@@ -1,0 +1,53 @@
+"""Version-compat wrappers over the handful of jax APIs that moved
+between 0.4.x and 0.5+/0.6+.
+
+The repo targets the modern spellings (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.sharding.AxisType``); older jaxlibs (0.4.x, what the CI container
+ships) spell these ``jax.experimental.shard_map.shard_map`` with
+``check_rep`` and a ``make_mesh`` without ``axis_types``.  Everything in
+the repo goes through these two functions instead of touching the moved
+names directly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, explicit: bool = False):
+    """``jax.make_mesh`` with Auto (or Explicit) axis types when the
+    installed jax supports them, plain mesh otherwise."""
+    if _HAS_AXIS_TYPE:
+        at = (jax.sharding.AxisType.Explicit if explicit
+              else jax.sharding.AxisType.Auto)
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=(at,) * len(tuple(axis_names)))
+    # pre-AxisType jax: every mesh axis is Auto already
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def axis_size(axis_name: str) -> int:
+    """``jax.lax.axis_size`` (new) / ``psum(1, axis)`` (old) inside a
+    shard_map/pmap body — both resolve to a static int."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` (new) / ``jax.experimental.shard_map`` (old).
+
+    ``check_vma`` is the new name of the old ``check_rep``; both toggle
+    the replication-invariance checker.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

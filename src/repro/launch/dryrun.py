@@ -283,8 +283,9 @@ def analyze_cell(arch: str, cell_name: str, mesh, multi_pod: bool,
         path = os.path.join(hlo_dir, f"{arch}__{cell_name}__{tag}.hlo.gz")
         with gzip.open(path, "wt") as f:
             f.write(compiled.as_text())
+    from repro.roofline.hlo_parser import cost_analysis_dict
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     roof = roofline_from_compiled(arch, cell_name, lowered, compiled,
                                   n_chips=int(np.prod(list(mesh.shape.values()))))
     rec = {

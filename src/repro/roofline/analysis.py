@@ -113,10 +113,10 @@ def roofline_from_compiled(arch: str, cell_name: str, lowered, compiled,
     Raw numbers are kept under raw_* for comparison.
     """
     from repro.configs import cell_by_name, get_config
-    from repro.roofline.hlo_parser import analyze
+    from repro.roofline.hlo_parser import analyze, cost_analysis_dict
     cfg = get_config(arch)
     cell = cell_by_name(cell_name)
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     try:
         hlo = compiled.as_text()
     except Exception:

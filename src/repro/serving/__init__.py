@@ -1,1 +1,18 @@
-"""serving subpackage."""
+"""serving subpackage: static Table-4 snapshot (``simulator``), real
+split-execution engines (``engine``), and the event-driven continuous
+simulator (``fleet_sim``)."""
+from repro.serving.fleet_sim import (  # noqa: F401
+    FleetSimResult,
+    FleetSimulator,
+    SimConfig,
+    run_fleet_sim,
+)
+from repro.serving.simulator import (  # noqa: F401
+    CALIBRATED,
+    POLICIES,
+    fleet_sim_table4,
+    make_scheduler,
+    run_table4,
+    table4,
+    table4_fleet,
+)

@@ -42,26 +42,50 @@ class Table4Row:
     batched_fraction: float
 
 
+def table4_fleet(n_devices: int = 1000, seed: int = 0,
+                 params: CostParams = CALIBRATED,
+                 rtt: float = 0.3) -> List[DeviceProfile]:
+    """THE paper fleet (§5.4): N(2.25, 0.28) device rates.  Single
+    source for every Table-4 surface — the static path, the event-driven
+    simulator's default, and the benchmarks — so the calibration can't
+    drift apart between them."""
+    return generate_fleet(n_devices, 2.25, 0.28, seed=seed, rtt=rtt,
+                          k_decode=params.k_decode)
+
+
 def run_table4(n_devices: int = 1000, seed: int = 0,
                params: CostParams = CALIBRATED,
                rtt: float = 0.3) -> Dict[str, ScheduleSummary]:
-    fleet = generate_fleet(n_devices, 2.25, 0.28, seed=seed, rtt=rtt,
-                           k_decode=params.k_decode)
-    return run_schedulers(fleet, params)
+    return run_schedulers(table4_fleet(n_devices, seed, params, rtt), params)
+
+
+#: The four Table-4 policies, in paper order.
+POLICIES = ("all_cloud", "constant", "variable", "variable+batching")
+
+
+def make_scheduler(name: str, params: CostParams,
+                   worst_r_dev: float = SLOWEST_DEVICE,
+                   worst_rtt: float = 0.3, batch_size: int = 2):
+    """Single factory for the Table-4 policies — shared by the static
+    snapshot path below and the event-driven ``serving.fleet_sim``, so
+    both always run the exact same per-request assignment logic."""
+    if name == "all_cloud":
+        return AllCloudScheduler(params)
+    if name == "constant":
+        return ConstantIterationScheduler(params, worst_r_dev=worst_r_dev,
+                                          worst_rtt=worst_rtt)
+    if name == "variable":
+        return VariableIterationScheduler(params)
+    if name == "variable+batching":
+        return IntelligentBatchingScheduler(params, c_batch=params.c_batch,
+                                            batch_size=batch_size)
+    raise ValueError(f"unknown policy {name!r}; expected one of {POLICIES}")
 
 
 def run_schedulers(fleet: List[DeviceProfile],
                    params: CostParams) -> Dict[str, ScheduleSummary]:
-    worst = min(d.r_dev for d in fleet)
-    worst = max(worst, SLOWEST_DEVICE * 0.9)
-    scheds = {
-        "all_cloud": AllCloudScheduler(params),
-        "constant": ConstantIterationScheduler(
-            params, worst_r_dev=SLOWEST_DEVICE, worst_rtt=fleet[0].rtt),
-        "variable": VariableIterationScheduler(params),
-        "variable+batching": IntelligentBatchingScheduler(
-            params, c_batch=params.c_batch),
-    }
+    scheds = {name: make_scheduler(name, params, worst_rtt=fleet[0].rtt)
+              for name in POLICIES}
     return {name: s.summarize(fleet) for name, s in scheds.items()}
 
 
@@ -74,6 +98,39 @@ def table4(n_devices: int = 1000, seed: int = 0) -> List[Table4Row]:
             scheduler=name, cloud_gpu_time=summ.total_gpu_time,
             paper_value=paper.get(name), violations=summ.violations,
             batched_fraction=summ.batched_fraction))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Time-domain delegation: the event-driven fleet simulator
+# (serving.fleet_sim) runs the SAME schedulers over a continuous arrival
+# stream; in the steady-state limit its per-request cloud GPU-seconds
+# converge to the static totals above.
+# --------------------------------------------------------------------------
+def fleet_sim_table4(rate: float = 25.0, duration: float = 120.0,
+                     seed: int = 0, params: CostParams = CALIBRATED,
+                     policies=POLICIES, **overrides):
+    """Run the event-driven simulator once per policy over the Table-4
+    fleet and report cloud GPU-seconds normalized per 1000 requests —
+    directly comparable against ``run_table4`` totals.
+
+    Returns {policy: {"gpu_time_per_1000", "p99_latency", "violations",
+    "result": FleetSimResult}}.
+    """
+    from repro.serving.fleet_sim import SimConfig, run_fleet_sim
+    fleet = table4_fleet(seed=seed, params=params)
+    out = {}
+    for name in policies:
+        kw = dict(policy=name, params=params, rate=rate,
+                  duration=duration, seed=seed, fleet=fleet)
+        kw.update(overrides)        # explicit overrides win, incl. fleet
+        res = run_fleet_sim(SimConfig(**kw))
+        out[name] = {
+            "gpu_time_per_1000": res.gpu_seconds_per_request() * 1000.0,
+            "p99_latency": res.latency_percentile(99),
+            "violations": res.violations,
+            "result": res,
+        }
     return out
 
 

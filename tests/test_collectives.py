@@ -3,6 +3,7 @@ devices exist; the ring logic is device-count generic)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.collectives import (
@@ -10,18 +11,19 @@ from repro.distributed.collectives import (
     reduce_scatter_then_gather,
     ring_all_gather,
 )
+from repro.jax_compat import make_mesh, shard_map
 from repro.launch.mesh import make_host_mesh
 
 
 def test_ring_all_gather_matches_all_gather():
     n = len(jax.devices())
-    mesh = jax.make_mesh((n,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((n,), ("x",))
     x = jnp.arange(n * 4 * 3, dtype=jnp.float32).reshape(n * 4, 3)
     got = make_ring_all_gather(mesh, "x")(x)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
 
 
+@pytest.mark.multidevice
 def test_ring_all_gather_8_devices_subprocess():
     """Real multi-device ring semantics (8 fake CPU devices; jax locks the
     device count at first init, so this needs a fresh process)."""
@@ -32,7 +34,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
 from repro.distributed.collectives import make_ring_all_gather
-mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.jax_compat import make_mesh
+mesh = make_mesh((8,), ("x",))
 x = jnp.arange(8 * 2 * 3, dtype=jnp.float32).reshape(16, 3)
 got = make_ring_all_gather(mesh, "x")(x)
 np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
@@ -50,17 +53,16 @@ print("RING_OK")
 
 def test_reduce_scatter_then_gather_is_all_reduce():
     n = len(jax.devices())
-    mesh = jax.make_mesh((n,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((n,), ("x",))
     x = jnp.arange(n * 2 * 2, dtype=jnp.float32).reshape(n * 2, 2)
 
     def body(s):
         return reduce_scatter_then_gather(s, "x")
 
-    got = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("x"),
-                                out_specs=P("x"), check_vma=False))(x)
+    got = jax.jit(shard_map(body, mesh=mesh, in_specs=P("x"),
+                            out_specs=P("x"), check_vma=False))(x)
     def ref(s):
         return jax.lax.psum(s, "x")
-    want = jax.jit(jax.shard_map(ref, mesh=mesh, in_specs=P("x"),
-                                 out_specs=P("x"), check_vma=False))(x)
+    want = jax.jit(shard_map(ref, mesh=mesh, in_specs=P("x"),
+                             out_specs=P("x"), check_vma=False))(x)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want))

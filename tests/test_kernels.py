@@ -111,6 +111,10 @@ def test_flash_custom_vjp_grads():
 
     r, gr = jax.value_and_grad(ref_loss, argnums=(0, 1, 2))(q, k, v)
     f, gf = jax.value_and_grad(flash_loss, argnums=(0, 1, 2))(q, k, v)
-    assert abs(float(r - f)) < 1e-4
+    # The loss is a sum over B*S*Hq*D = 131072 fp32 values with |sum| ~1e3;
+    # the chunked online softmax accumulates in a different order than the
+    # one-shot softmax, so the two sums differ by O(|sum| * eps * sqrt(N))
+    # ~ 1e-4 — a relative comparison is the meaningful one here.
+    assert abs(float(r - f)) < 1e-6 * max(1.0, abs(float(r)))
     for a, b in zip(gr, gf):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

@@ -4,6 +4,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 from repro.distributed.pipeline import bubble_fraction
 
 
@@ -13,16 +15,17 @@ def test_bubble_fraction():
     assert bubble_fraction(100, 2) < 0.01
 
 
+@pytest.mark.multidevice
 def test_gpipe_matches_sequential_subprocess():
     code = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import numpy as np, jax, jax.numpy as jnp
 from repro.distributed.pipeline import gpipe_forward
+from repro.jax_compat import make_mesh
 
 S, M, B, D = 4, 6, 2, 8
-mesh = jax.make_mesh((S,), ("stage",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((S,), ("stage",))
 key = jax.random.PRNGKey(0)
 W = jax.random.normal(key, (S, D, D)) * 0.3          # one matmul per stage
 

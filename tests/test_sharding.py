@@ -121,7 +121,7 @@ def test_moe_ep_matches_tp_mode():
 def test_hlo_parser_trip_counts():
     """The roofline analyzer folds scan trip counts (cost_analysis does
     not) — validated on a known matmul-in-scan."""
-    from repro.roofline.hlo_parser import analyze
+    from repro.roofline.hlo_parser import analyze, cost_analysis_dict
 
     def g(x, w):
         def body(c, wi):
@@ -133,5 +133,5 @@ def test_hlo_parser_trip_counts():
     c = jax.jit(g).lower(x, w).compile()
     r = analyze(c.as_text())
     assert r["flops"] == 10 * 2 * 64 ** 3
-    raw = c.cost_analysis().get("flops", 0)
+    raw = cost_analysis_dict(c).get("flops", 0)
     assert raw < r["flops"]
