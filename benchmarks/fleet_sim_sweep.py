@@ -1,29 +1,59 @@
-"""Arrival-rate x policy sweep of the event-driven fleet simulator.
+"""Arrival-rate x policy sweep of the event-driven fleet simulator,
+plus the heterogeneous-capacity EDF-vs-FIFO comparison.
 
 For each (policy, rate) cell: run the continuous simulator over the
 Table-4 fleet, report p99 latency, SLA violation rate, GPU utilization
-and normalized cloud GPU-seconds — plus the per-snapshot time-series
-(p99 / queue depth / GPU count) dumped to JSON for plotting.
+and normalized cloud GPU-seconds.  The heterogeneous cell runs the
+2-class pool (calibrated base + 0.5x preemptible spot) under the
+diurnal trace twice — deadline-blind FIFO vs EDF + deadline-aware
+class routing — on the SAME provisioned capacity (equal GPU cost), and
+reports the p99/violation gap.
 
+Results land in ``BENCH_fleet_sim.json`` (repo root by default) so the
+perf trajectory is machine-readable across PRs:
+
+    PYTHONPATH=src python -m benchmarks.fleet_sim_sweep            # full
+    PYTHONPATH=src python -m benchmarks.fleet_sim_sweep --smoke    # CI, <30s
     PYTHONPATH=src python -m benchmarks.run fleet_sim_sweep
-    PYTHONPATH=src python -m benchmarks.fleet_sim_sweep out.json   # JSON
 
 The steady-state check (GPU-seconds vs the static Table 4) lives in
 tests/test_fleet_sim.py; this sweep is about what the static model can't
-show: queueing, batching windows, and autoscaler dynamics under load.
+show: queueing, batching windows, dispatch policy, and autoscaler
+dynamics under load.
 """
+import argparse
 import json
-import sys
 import time
 
 from repro.serving.fleet_sim import SimConfig, run_fleet_sim
-from repro.serving.simulator import CALIBRATED, POLICIES, table4_fleet
+from repro.serving.simulator import (
+    CALIBRATED,
+    POLICIES,
+    table4_capacity,
+    table4_fleet,
+)
 
 RATES = (5.0, 15.0, 30.0, 60.0)
 DURATION = 120.0
+SMOKE_RATES = (15.0,)
+SMOKE_DURATION = 40.0
+
+#: The heterogeneity demonstration cell: 2-class pool under one diurnal
+#: day.  Sized so the peak queues transiently (where dispatch order
+#: matters) without melting down.
+HETERO = dict(rate=20.0, duration=300.0, period_s=300.0,
+              base_count=12, spot_count=20)
 
 
-def sweep(rates=RATES, policies=POLICIES, duration=DURATION, seed=0):
+def _cell_record(policy, rate, res, keep_timeseries=False):
+    rec = {"policy": policy, "rate": rate, **res.to_json()}
+    if not keep_timeseries:
+        del rec["timeseries"]
+    return rec
+
+
+def sweep(rates=RATES, policies=POLICIES, duration=DURATION, seed=0,
+          keep_timeseries=True):
     fleet = table4_fleet(seed=seed, params=CALIBRATED)
     cells = []
     for policy in policies:
@@ -33,37 +63,118 @@ def sweep(rates=RATES, policies=POLICIES, duration=DURATION, seed=0):
                             seed=seed, fleet=fleet,
                             gpus_init=max(4, int(rate)), max_gpus=256)
             res = run_fleet_sim(cfg)
-            cells.append({"policy": policy, "rate": rate,
-                          **res.to_json()})
+            cells.append(_cell_record(policy, rate, res,
+                                      keep_timeseries=keep_timeseries))
     return cells
 
 
+def hetero_comparison(seed=0, rate=HETERO["rate"],
+                      duration=HETERO["duration"],
+                      period_s=HETERO["period_s"]):
+    """EDF + class-aware routing vs deadline-blind FIFO on the SAME
+    2-class pool (equal provisioned GPU cost; autoscale off so neither
+    run can buy its way out)."""
+    cap = table4_capacity(base_count=HETERO["base_count"],
+                          spot_count=HETERO["spot_count"],
+                          base_max=HETERO["base_count"],
+                          spot_max=HETERO["spot_count"])
+    out = {"capacity": cap.to_json(), "seed": seed, "rate": rate,
+           "duration": duration}
+    for dispatch in ("fifo", "edf"):
+        cfg = SimConfig(policy="variable+batching", params=CALIBRATED,
+                        process="diurnal", rate=rate, duration=duration,
+                        diurnal_period_s=period_s, seed=seed,
+                        capacity=cap, dispatch=dispatch, autoscale=False)
+        res = run_fleet_sim(cfg)
+        rec = _cell_record("variable+batching", rate, res)
+        del rec["per_class"]
+        rec["per_class_gpu_seconds"] = {
+            k: v["gpu_seconds"] for k, v in res.per_class.items()}
+        out[dispatch] = rec
+    out["p99_improvement"] = (out["fifo"]["p99_latency"]
+                              - out["edf"]["p99_latency"])
+    out["edf_beats_fifo"] = (out["edf"]["p99_latency"]
+                             < out["fifo"]["p99_latency"])
+    return out
+
+
+def bench(smoke=False, seed=0):
+    """The BENCH_fleet_sim.json payload: policy x rate grid -> cloud
+    GPU-s / p99 / violation rate, plus the heterogeneous dispatch cell."""
+    rates = SMOKE_RATES if smoke else RATES
+    duration = SMOKE_DURATION if smoke else DURATION
+    t0 = time.perf_counter()
+    grid = sweep(rates=rates, duration=duration, seed=seed,
+                 keep_timeseries=False)
+    het = hetero_comparison(
+        seed=seed, duration=SMOKE_DURATION * 2 if smoke else
+        HETERO["duration"],
+        period_s=SMOKE_DURATION * 2 if smoke else HETERO["period_s"])
+    return {
+        "bench": "fleet_sim_sweep",
+        "smoke": smoke,
+        "seed": seed,
+        "rates": list(rates),
+        "duration": duration,
+        "wall_s": round(time.perf_counter() - t0, 2),
+        "grid": [{k: cell[k] for k in
+                  ("policy", "rate", "dispatch", "n_completed",
+                   "violations", "violation_rate", "total_gpu_seconds",
+                   "gpu_seconds_per_request", "total_gpu_cost",
+                   "p50_latency", "p99_latency", "batched_fraction",
+                   "peak_gpus", "utilization")}
+                 for cell in grid],
+        "hetero": het,
+    }
+
+
 def run():
+    """benchmarks.run surface: one row per grid cell + the hetero cell."""
     rows = []
     t0 = time.perf_counter()
-    cells = sweep()
-    dt = (time.perf_counter() - t0) * 1e6 / len(cells)
-    for c in cells:
-        viol_rate = c["violations"] / max(1, c["n_completed"])
+    payload = bench(smoke=False)
+    dt = (time.perf_counter() - t0) * 1e6 / max(1, len(payload["grid"]))
+    for c in payload["grid"]:
         rows.append((
             f"fleet_sim/{c['policy']}/rate_{c['rate']:g}", dt,
-            f"p99={c['p99_latency']:.2f}s viol={viol_rate:.3f} "
+            f"p99={c['p99_latency']:.2f}s viol={c['violation_rate']:.3f} "
             f"util={c['utilization']:.2f} "
             f"gpu_s_per_1000={c['gpu_seconds_per_request'] * 1000:.1f} "
             f"peak_gpus={c['peak_gpus']}"))
+    het = payload["hetero"]
+    rows.append((
+        "fleet_sim/hetero_2class/edf_vs_fifo", dt,
+        f"p99_fifo={het['fifo']['p99_latency']:.2f}s "
+        f"p99_edf={het['edf']['p99_latency']:.2f}s "
+        f"viol_fifo={het['fifo']['violations']} "
+        f"viol_edf={het['edf']['violations']}"))
     return rows
 
 
 def main():
-    out_path = sys.argv[1] if len(sys.argv) > 1 else "fleet_sim_sweep.json"
-    cells = sweep()
-    with open(out_path, "w") as f:
-        json.dump(cells, f, indent=1)
-    print(f"wrote {len(cells)} cells to {out_path}")
-    for c in cells:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("out", nargs="?", default="BENCH_fleet_sim.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grid for the CI fast tier (<30 s)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    payload = bench(smoke=args.smoke, seed=args.seed)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {len(payload['grid'])} grid cells + hetero comparison "
+          f"to {args.out} ({payload['wall_s']}s)")
+    for c in payload["grid"]:
         print(f"{c['policy']:20s} rate={c['rate']:5g} "
               f"p99={c['p99_latency']:.2f}s viol={c['violations']} "
               f"util={c['utilization']:.2f} peak_gpus={c['peak_gpus']}")
+    het = payload["hetero"]
+    print(f"hetero 2-class (base + 0.5x spot, equal provisioned cost): "
+          f"p99 fifo={het['fifo']['p99_latency']:.2f}s "
+          f"edf={het['edf']['p99_latency']:.2f}s "
+          f"(edf_beats_fifo={het['edf_beats_fifo']}); "
+          f"violations fifo={het['fifo']['violations']} "
+          f"edf={het['edf']['violations']}")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,9 @@
 """The paper's contribution: cost model, scheduler, segmentation, transport."""
+from repro.core.capacity import (  # noqa: F401
+    CloudCapacity,
+    GpuClass,
+    reference_params,
+)
 from repro.core.cost_model import (  # noqa: F401
     CostParams,
     SegmentCost,
@@ -18,10 +23,13 @@ from repro.core.scheduler import (  # noqa: F401
     AllocationPlan,
     Assignment,
     ConstantIterationScheduler,
+    HeteroAllocationPlan,
     IntelligentBatchingScheduler,
     ScheduleSummary,
     VariableIterationScheduler,
     allocate_gpus,
+    allocate_gpus_heterogeneous,
+    cheapest_feasible_class,
     summarize,
 )
 from repro.core.telemetry import (  # noqa: F401

@@ -30,8 +30,15 @@ from typing import Optional
 
 @dataclasses.dataclass(frozen=True)
 class CostParams:
-    """Cloud + job constants for the iteration-granularity model."""
-    r_cloud: float            # cloud diffusion rate, iterations / s
+    """Cloud + job constants for the iteration-granularity model.
+
+    ``r_cloud`` is the REFERENCE cloud rate: for a heterogeneous pool
+    (``core.capacity.CloudCapacity``) it is the capacity's count-weighted
+    mean rate (see ``capacity.reference_params``), so every closed-form
+    solve below keeps working unchanged; class-aware callers pass an
+    explicit per-class ``r_cloud`` override instead.
+    """
+    r_cloud: float            # REFERENCE cloud diffusion rate, iterations / s
     n_total: int              # iterations needed for full quality
     n_step: int               # scheduler quantization step (groups)
     t_lim: float              # SLA: max end-to-end latency, seconds
@@ -40,24 +47,33 @@ class CostParams:
 
 
 def e2e_latency(n_cloud: float, r_dev: float, p: CostParams,
-                t_network: float, c_batch: Optional[float] = None) -> float:
-    """T(n_cloud) for a device with rate r_dev and measured RTT."""
+                t_network: float, c_batch: Optional[float] = None,
+                r_cloud: Optional[float] = None) -> float:
+    """T(n_cloud) for a device with rate r_dev and measured RTT.
+
+    ``r_cloud`` overrides the reference rate with a specific GPU class's
+    rate (class-aware dispatch).
+    """
     cb = p.c_batch if c_batch is None else c_batch
-    return (n_cloud * cb / p.r_cloud
+    rc = p.r_cloud if r_cloud is None else r_cloud
+    return (n_cloud * cb / rc
             + (p.n_total - n_cloud) / r_dev
             + t_network
             + p.k_decode / r_dev)
 
 
 def solve_n_cloud(r_dev: float, p: CostParams, t_network: float,
-                  c_batch: Optional[float] = None) -> float:
+                  c_batch: Optional[float] = None,
+                  r_cloud: Optional[float] = None) -> float:
     """Minimum (real-valued) n_cloud with T(n_cloud) <= t_lim.
 
     Returns 0.0 when the device alone meets the SLA, and n_total when even
     all-cloud cannot meet it (best effort; caller may flag infeasible).
+    ``r_cloud`` overrides the reference rate (class-aware variant).
     """
     cb = p.c_batch if c_batch is None else c_batch
-    denom = cb / p.r_cloud - 1.0 / r_dev
+    rc = p.r_cloud if r_cloud is None else r_cloud
+    denom = cb / rc - 1.0 / r_dev
     rhs = p.t_lim - t_network - (p.n_total + p.k_decode) / r_dev
     if rhs >= 0:
         return 0.0                       # local-only already meets the SLA
@@ -90,13 +106,16 @@ def paper_quantize(n_cloud: float, n_step: int, n_total: int) -> int:
 
 
 def cloud_gpu_time(n_cloud: float, p: CostParams,
-                   batch_factor: float = 1.0) -> float:
+                   batch_factor: float = 1.0,
+                   r_cloud: Optional[float] = None) -> float:
     """Accelerator-seconds the cloud spends on one request.
 
     batch_factor: c_batch / batch_size for batched execution (e.g. 1.6/2
-    when pairs run together), 1.0 when running alone.
+    when pairs run together), 1.0 when running alone.  ``r_cloud``
+    overrides the reference rate with the executing class's rate.
     """
-    return n_cloud * batch_factor / p.r_cloud
+    rc = p.r_cloud if r_cloud is None else r_cloud
+    return n_cloud * batch_factor / rc
 
 
 def batchable(n_final: int, r_dev: float, p: CostParams, t_network: float,

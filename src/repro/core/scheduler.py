@@ -242,3 +242,74 @@ def allocate_gpus(summary: ScheduleSummary, p: CostParams, n_gpus: int,
     return AllocationPlan(
         fractions=fracs, total_workload=total, gpus_needed=needed,
         release_gpus=needed < release_threshold * n_gpus)
+
+
+# --------------------------------------------------------------------------
+# Heterogeneous capacity (core.capacity): class-aware dispatch + §4.5
+# per-class allocation
+# --------------------------------------------------------------------------
+def cheapest_feasible_class(n_final: int, r_dev: float, t_network: float,
+                            p: CostParams, capacity,
+                            c_batch: float = 1.0,
+                            slack_s: float = 0.0):
+    """Pick the cheapest GPU class whose rate still meets the request's
+    deadline (the heterogeneous dispatch rule).
+
+    ``capacity`` is a ``core.capacity.CloudCapacity``.  Classes are tried
+    cheapest-$/GPU-s first; the first whose no-queue latency (plus any
+    known ``slack_s`` already spent waiting/queueing) fits inside t_lim
+    wins.  When no class is feasible the FASTEST class is returned — the
+    least-bad best effort, mirroring ``solve_n_cloud`` saturating at
+    n_total.
+
+    This is the pure model-level rule; the fleet simulator's
+    ``HeterogeneousDispatcher.route`` is its queue-state-aware sibling
+    (per-class queue estimates, zero-capacity exclusion) — keep their
+    orderings in sync.
+    """
+    for cls in capacity.cheapest_first():
+        lat = e2e_latency(n_final, r_dev, p, t_network, c_batch=c_batch,
+                          r_cloud=cls.r_cloud)
+        if lat + slack_s <= p.t_lim + 1e-9:
+            return cls
+    return capacity.fastest()
+
+
+@dataclasses.dataclass
+class HeteroAllocationPlan:
+    """§4.5 plan for a heterogeneous pool: per-class GPU targets
+    (scale-spot-first / release-spot-first greedy), plus the scalar plan
+    at the reference rate it was derived from."""
+    targets: Dict[str, int]         # class name -> target GPU count
+    reference: AllocationPlan       # scalar plan at the reference rate
+    needed_supply: float            # iterations/s the targets must cover
+
+    @property
+    def release_gpus(self) -> bool:
+        return self.reference.release_gpus
+
+
+def allocate_gpus_heterogeneous(summary: ScheduleSummary, p: CostParams,
+                                capacity, current: Dict[str, int],
+                                horizon_s: float, headroom: float = 1.0,
+                                release_threshold: float = 0.5
+                                ) -> HeteroAllocationPlan:
+    """Class-aware §4.5 allocation: size the pool at the reference rate,
+    then meet that supply with per-class counts via
+    ``CloudCapacity.plan_counts`` (spot scales first, spot releases
+    first).
+
+    For a homogeneous capacity this reduces EXACTLY to the scalar path:
+    target = clamp(ceil(gpus_needed * headroom), min, max).
+    """
+    r_ref = capacity.reference_rate()
+    p_ref = dataclasses.replace(p, r_cloud=r_ref)
+    n_current = sum(current.values())
+    ref_plan = allocate_gpus(summary, p_ref, n_gpus=n_current,
+                             horizon_s=horizon_s,
+                             release_threshold=release_threshold)
+    want_ref = math.ceil(ref_plan.gpus_needed * headroom)
+    needed_supply = want_ref * r_ref
+    targets = capacity.plan_counts(needed_supply, current)
+    return HeteroAllocationPlan(targets=targets, reference=ref_plan,
+                                needed_supply=needed_supply)

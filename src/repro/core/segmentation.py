@@ -123,8 +123,10 @@ def layer_split_points(cfg, batch: int, seq: int, *,
         frac = g / G
         cloud = total_body * frac
         device = total_body * (1 - frac) + head_flops
-        payload = hidden_bytes + state_bytes if 0 < g < G + 1 else (
-            hidden_bytes + state_bytes)
+        # g == 0 runs everything on the device: no boundary crossing, so
+        # nothing is transferred; every real split ships the hidden
+        # states (+ streaming state)
+        payload = 0 if g == 0 else hidden_bytes + state_bytes
         pts.append(SplitPoint(
             name=f"group{g}", index=g, payload_bytes=payload,
             cloud_flops=cloud, device_flops=device))

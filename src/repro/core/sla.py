@@ -95,6 +95,11 @@ class DeadlineTracker:
     def in_flight(self) -> int:
         return len(self._open)
 
+    def get(self, request_id: str) -> Optional[RequestDeadline]:
+        """The open deadline for ``request_id`` (None once closed) — what
+        an EDF dispatcher reads to order queued work."""
+        return self._open.get(request_id)
+
     def min_slack(self, now: float) -> Optional[float]:
         if not self._open:
             return None

@@ -303,6 +303,24 @@ def analyze_cell(arch: str, cell_name: str, mesh, multi_pod: bool,
     return rec
 
 
+def write_capacity(records, out_path: str, cell: Optional[str] = None,
+                   count_per_class: int = 8) -> int:
+    """Aggregate the per-hardware ``r_cloud_est`` maps of ``records``
+    into a calibrated ``CloudCapacity`` artifact (JSON rows, one per GPU
+    class) — the roofline-driven replacement for hand-calibrated
+    per-class rates.  Returns the number of classes written."""
+    from repro.core.capacity import CloudCapacity
+    ok = [r for r in records if r.get("r_cloud_est")]
+    if not ok:
+        return 0
+    hw_names = sorted({hw for r in ok for hw in r["r_cloud_est"]})
+    cap = CloudCapacity.from_roofline(
+        ok, counts={hw: count_per_class for hw in hw_names}, cell=cell)
+    with open(out_path, "w") as f:
+        json.dump(cap.to_json(), f, indent=1)
+    return len(cap)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -312,6 +330,9 @@ def main():
     ap.add_argument("--out", default="dryrun.jsonl")
     ap.add_argument("--save-hlo", default=None,
                     help="directory to save compiled HLO text (gz) per cell")
+    ap.add_argument("--capacity-out", default=None,
+                    help="write the roofline-calibrated CloudCapacity "
+                         "(per-hardware r_cloud classes) to this JSON file")
     args = ap.parse_args()
 
     archs = [args.arch] if args.arch else ARCH_IDS
@@ -350,6 +371,11 @@ def main():
                     f.write(json.dumps(rec) + "\n")
                     f.flush()
                     results.append(rec)
+    if args.capacity_out:
+        n_classes = write_capacity(results, args.capacity_out,
+                                   cell=args.cell)
+        print(f"wrote {n_classes} calibrated GPU classes to "
+              f"{args.capacity_out}")
     n_fail = sum("FAIL" in str(r.get("status")) for r in results)
     print(f"\n{len(results)} cells run, {n_fail} failures")
     return 1 if n_fail else 0

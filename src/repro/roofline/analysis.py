@@ -15,14 +15,65 @@ measures how much compiled compute is "useful" (catches remat/redundancy).
 """
 from __future__ import annotations
 
+import dataclasses
 import re
-from typing import Dict, Optional
+from typing import Dict, Mapping, Optional
 
 import numpy as np
 
 PEAK_FLOPS = 197e12          # TPU v5e bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
+
+
+# --------------------------------------------------------------------------
+# Accelerator architecture table: the roofline re-evaluated per hardware
+# class, which is what calibrates per-class cloud rates (r_cloud) for
+# core.capacity.CloudCapacity instead of hand calibration.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Peak numbers of one accelerator generation (dense bf16/fp16)."""
+    name: str
+    peak_flops: float        # FLOP/s per chip
+    hbm_bw: float            # HBM bytes/s per chip
+    ici_bw: float            # interconnect bytes/s per link
+
+    def step_time_s(self, flops: float, bytes_: float,
+                    coll_bytes: float = 0.0) -> float:
+        """Roofline step latency: the binding term of one program step."""
+        return max(flops / self.peak_flops, bytes_ / self.hbm_bw,
+                   (coll_bytes / self.ici_bw) if coll_bytes else 0.0)
+
+
+#: The hardware classes the calibration loop knows about.  v5e carries
+#: the module-level constants (the dry-run mesh target); the GPU entries
+#: model the generations a mixed production pool would hold.
+HW_SPECS: Dict[str, HardwareSpec] = {
+    "v5e": HardwareSpec("v5e", PEAK_FLOPS, HBM_BW, ICI_BW),
+    "a100": HardwareSpec("a100", 312e12, 2.0e12, 300e9),
+    "h100": HardwareSpec("h100", 989e12, 3.35e12, 450e9),
+    "rtx4090": HardwareSpec("rtx4090", 165e12, 1.0e12, 16e9),
+}
+
+
+def r_cloud_estimates(flops_per_step: float, bytes_per_step: float,
+                      coll_bytes_per_step: float = 0.0,
+                      specs: Optional[Mapping[str, HardwareSpec]] = None
+                      ) -> Dict[str, float]:
+    """Per-architecture serving-rate estimates (steps/s per chip).
+
+    One diffusion iteration (or decode step) costing ``flops_per_step`` /
+    ``bytes_per_step`` per device runs at 1 / roofline-step-time on each
+    hardware class — the ``r_cloud`` that ``CloudCapacity.from_roofline``
+    consumes, replacing hand calibration of per-class rates.
+    """
+    out = {}
+    for name, spec in (specs or HW_SPECS).items():
+        t = spec.step_time_s(flops_per_step, bytes_per_step,
+                             coll_bytes_per_step)
+        out[name] = (1.0 / t) if t > 0 else float("inf")
+    return out
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -139,6 +190,8 @@ def roofline_from_compiled(arch: str, cell_name: str, lowered, compiled,
         "raw_flops_per_device": float(cost.get("flops", 0.0)),
         "raw_bytes_per_device": float(cost.get("bytes accessed", 0.0)),
         **{k: round(v, 6) for k, v in terms.items()},
+        "r_cloud_est": {k: round(v, 4) for k, v in
+                        r_cloud_estimates(flops, byts, coll_total).items()},
         "dominant": dom,
         "model_flops_per_device": mf_per_device,
         "useful_flops_ratio": round(mf_per_device / flops, 4) if flops else None,

@@ -4,6 +4,8 @@ simulator (``fleet_sim``)."""
 from repro.serving.fleet_sim import (  # noqa: F401
     FleetSimResult,
     FleetSimulator,
+    GpuPool,
+    HeterogeneousDispatcher,
     SimConfig,
     run_fleet_sim,
 )
@@ -14,5 +16,6 @@ from repro.serving.simulator import (  # noqa: F401
     make_scheduler,
     run_table4,
     table4,
+    table4_capacity,
     table4_fleet,
 )

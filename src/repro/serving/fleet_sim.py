@@ -1,5 +1,6 @@
 """Event-driven fleet serving simulator: the paper's scheduler (§4.3),
-batching (§4.4) and GPU allocation (§4.5) with a TIME axis.
+batching (§4.4) and GPU allocation (§4.5) with a TIME axis — over a
+heterogeneous cloud.
 
 The static ``serving.simulator`` assigns a fixed fleet in one shot; this
 module models the production system the paper argues for: requests
@@ -8,8 +9,31 @@ assigned its ``n_final`` group by the SAME scheduler objects
 (``make_scheduler``), admitted requests wait in per-group batching
 windows (§4.4 online admission: a request only waits if it still meets
 its SLA at the batched rate), batches execute on a modeled GPU pool, and
-an autoscaler driven by ``allocate_gpus`` (§4.5) grows the pool on a
-sliding demand horizon and releases idle GPUs back to production jobs.
+an autoscaler driven by the §4.5 allocator grows the pool on a sliding
+demand horizon and releases idle GPUs back to production jobs.
+
+Cloud capacity is a ``core.capacity.CloudCapacity`` — one or more GPU
+classes (generation + spot slices), each backed by its own ``GpuPool``
+behind a single ``HeterogeneousDispatcher``:
+
+* routing: each cloud job goes to the CHEAPEST class whose rate still
+  meets its deadline (``dispatch="edf"``), or to the first class with a
+  free GPU (``dispatch="fifo"``, the deadline-blind baseline);
+* queueing: per-class queues pop earliest-deadline-first under "edf"
+  (deadline = arrival + t_lim − device_tail − rtt, read from the
+  ``core.sla.DeadlineTracker`` clocks) and FIFO under "fifo";
+* autoscaling: the §4.5 re-plan sizes aggregate supply at the capacity's
+  reference rate, then meets it per class — spot scales first, spot
+  releases first (``allocate_gpus_heterogeneous``);
+* adaptive SLA (``adaptive_sla=True``): the §7 controller watches
+  observed pool utilization each re-plan and relaxes / tightens
+  ``t_lim`` for FUTURE arrivals, so bursty load sheds latency instead of
+  violating deadlines.
+
+With the default homogeneous single-class capacity and FIFO dispatch the
+simulator is bit-identical to the pre-capacity refactor: the golden
+trace and the Table-4 steady-state convergence are the regression
+anchors.
 
 Event kinds (a single heapq drives everything):
 
@@ -20,12 +44,6 @@ Event kinds (a single heapq drives everything):
   AUTOSCALE    periodic §4.5 re-plan
   COMPLETE     device finished its local iterations + decode
   METRICS      periodic time-series snapshot
-
-Steady-state invariant (tested): with the Table-4 fleet cycled through
-the arrival stream, per-request cloud GPU-seconds converge to the static
-``run_table4`` totals — the closed loop between scheduler policy,
-batching and capacity planning reproduces the paper's numbers in the
-time-domain limit.
 """
 from __future__ import annotations
 
@@ -38,6 +56,7 @@ from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.capacity import CloudCapacity, GpuClass, reference_params
 from repro.core.cost_model import (
     CostParams,
     c_batch_at,
@@ -47,10 +66,10 @@ from repro.core.cost_model import (
 from repro.core.scheduler import (
     Assignment,
     ScheduleSummary,
-    allocate_gpus,
+    allocate_gpus_heterogeneous,
     group_workloads,
 )
-from repro.core.sla import DeadlineTracker
+from repro.core.sla import AdaptiveSLAController, DeadlineTracker, SLAPolicy
 from repro.core.telemetry import (
     DeviceProfile,
     bursty_arrivals,
@@ -64,6 +83,8 @@ from repro.serving.simulator import CALIBRATED, make_scheduler, table4_fleet
 # comes online before jobs are dispatched, arrivals before window flushes
 (EVT_CAPACITY, EVT_JOB_DONE, EVT_ARRIVAL, EVT_WINDOW, EVT_AUTOSCALE,
  EVT_COMPLETE, EVT_METRICS) = range(7)
+
+DISPATCH_MODES = ("fifo", "edf")
 
 
 # --------------------------------------------------------------------------
@@ -87,6 +108,13 @@ class SimConfig:
     batch_size: int = 2
     window_s: float = 1.0               # cap on any window's lifetime
     # GPU pool + autoscaler (§4.5)
+    #: heterogeneous capacity (core.capacity).  None builds a single
+    #: homogeneous class from (params.r_cloud, gpus_init, min/max_gpus) —
+    #: the pre-refactor pool, bit-identical behavior.
+    capacity: Optional[CloudCapacity] = None
+    #: "fifo" (legacy, the golden-trace anchor) or "edf": earliest-
+    #: deadline-first queues + deadline-aware cheapest-class routing.
+    dispatch: str = "fifo"
     gpus_init: int = 8
     min_gpus: int = 1
     max_gpus: int = 128
@@ -100,8 +128,21 @@ class SimConfig:
     #: utilization ~1.0 and unbounded M/M/c queueing delay, so the
     #: autoscaler provisions this much slack to keep p99 under the SLA.
     headroom: float = 1.3
+    # adaptive SLA (§7): relax t_lim under pressure instead of violating
+    adaptive_sla: bool = False
+    sla_floor: float = 1.0
+    sla_ceil: float = 60.0
+    sla_high_water: float = 0.85
+    sla_low_water: float = 0.5
     # telemetry
     metrics_interval_s: float = 5.0
+
+    def build_capacity(self) -> CloudCapacity:
+        if self.capacity is not None:
+            return self.capacity
+        return CloudCapacity.from_scalar(
+            self.params.r_cloud, count=self.gpus_init,
+            min_count=self.min_gpus, max_count=self.max_gpus)
 
 
 @dataclasses.dataclass
@@ -116,6 +157,9 @@ class SimRequest:
     batched: bool = False
     batch_slowdown: float = 1.0         # c_batch(b) its job actually ran at
     gpu_seconds: float = 0.0            # this request's share
+    gpu_class: str = ""                 # class its cloud job ran on
+    gpu_cost: float = 0.0               # gpu_seconds * class cost_weight
+    cloud_rate: float = 0.0             # r_cloud of the executing class
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,6 +179,8 @@ class CompletedRequest:
     latency: float
     lower_bound: float                  # no-queue network+compute latency
     violated: bool
+    gpu_class: str = ""
+    gpu_cost: float = 0.0
 
 
 @dataclasses.dataclass
@@ -143,6 +189,8 @@ class _Job:
     members: List[SimRequest]
     service: float                      # wall seconds on one GPU
     submitted: float
+    deadline: float = math.inf          # cloud-side finish deadline (EDF key)
+    gpu_class: str = ""
     started: float = -1.0
 
 
@@ -155,27 +203,48 @@ class _Window:
 
 
 # --------------------------------------------------------------------------
-# GPU pool
+# Per-class GPU pool
 # --------------------------------------------------------------------------
 class GpuPool:
-    """Homogeneous cloud GPU pool: FIFO job queue, integer capacity that
-    grows after a provisioning delay and releases only idle GPUs (§4.5's
-    over-subscription story: freed GPUs go back to production jobs)."""
+    """One GPU class's pool: integer capacity that grows after a
+    provisioning delay and releases only idle GPUs (§4.5's
+    over-subscription story: freed GPUs go back to production jobs).
 
-    def __init__(self, n_init: int, min_gpus: int, max_gpus: int):
+    Queue discipline: "fifo" (submission order) or "edf" (earliest
+    ``_Job.deadline`` first).  Pre-refactor this class WAS the whole
+    cloud; now one instance backs each ``GpuClass`` behind the
+    ``HeterogeneousDispatcher``.
+    """
+
+    def __init__(self, n_init: int, min_gpus: int, max_gpus: int,
+                 gpu_class: Optional[GpuClass] = None,
+                 discipline: str = "fifo"):
+        if discipline not in DISPATCH_MODES:
+            raise ValueError(f"unknown queue discipline {discipline!r}; "
+                             f"expected one of {DISPATCH_MODES}")
+        self.gpu_class = gpu_class
+        self.discipline = discipline
         self.capacity = max(n_init, min_gpus)
         self.min_gpus = min_gpus
         self.max_gpus = max_gpus
         self.busy = 0
-        self.queue: deque = deque()
-        self.queued_service = 0.0       # running sum over self.queue
+        self.queue: deque = deque()     # fifo: _Job; edf uses the heaps
+        self._heap: List[Tuple[float, int, _Job]] = []
+        self._doomed: List[Tuple[float, int, _Job]] = []
+        self._heap_seq = itertools.count()
+        self.queued_service = 0.0       # running sum over queued jobs
         self.pending = 0                # GPUs being provisioned
         self.gpu_seconds = 0.0
+        self.weighted_gpu_seconds = 0.0
         self.released_total = 0
-        self.peak_capacity = n_init
+        self.peak_capacity = self.capacity
         self._busy_integral = 0.0
         self._cap_integral = 0.0
         self._last_t = 0.0
+
+    @property
+    def cost_weight(self) -> float:
+        return self.gpu_class.cost_weight if self.gpu_class else 1.0
 
     def _advance(self, now: float) -> None:
         dt = now - self._last_t
@@ -188,24 +257,63 @@ class GpuPool:
         self.busy += 1
         job.started = now
         self.gpu_seconds += job.service
+        self.weighted_gpu_seconds += job.service * self.cost_weight
         return now + job.service
+
+    # -- queue discipline --------------------------------------------------
+    def queue_len(self) -> int:
+        if self.discipline == "edf":
+            return len(self._heap) + len(self._doomed)
+        return len(self.queue)
+
+    def _enqueue(self, job: _Job) -> None:
+        if self.discipline == "edf":
+            heapq.heappush(self._heap,
+                           (job.deadline, next(self._heap_seq), job))
+        else:
+            self.queue.append(job)
+        self.queued_service += job.service
+
+    def _dequeue(self, now: float) -> _Job:
+        if self.discipline == "edf":
+            job = self._dequeue_edf(now)
+        else:
+            job = self.queue.popleft()
+        self.queued_service -= job.service
+        return job
+
+    def _dequeue_edf(self, now: float) -> _Job:
+        """Earliest-deadline-first WITH overload shedding: a job that can
+        no longer win (even starting now it misses its deadline) yields
+        to every still-winnable job, so one hopeless request cannot
+        domino the whole queue into lateness — plain EDF famously
+        degrades below FIFO under sustained overload without this.
+        Doomed-ness is monotone (deadlines are fixed, time moves
+        forward), so the lazy reclassification at pop time is sound.
+        """
+        while self._heap:
+            dl, seq, job = heapq.heappop(self._heap)
+            if now + job.service > dl + 1e-9:
+                heapq.heappush(self._doomed, (dl, seq, job))
+            else:
+                return job
+        return heapq.heappop(self._doomed)[2]
 
     def _drain(self, now: float) -> List[Tuple[_Job, float]]:
         started = []
-        while self.queue and self.busy < self.capacity:
-            job = self.queue.popleft()
-            self.queued_service -= job.service
+        while self.queue_len() and self.busy < self.capacity:
+            job = self._dequeue(now)
             started.append((job, self._start(now, job)))
         return started
 
+    # -- public surface ----------------------------------------------------
     def submit(self, now: float, job: _Job) -> Optional[float]:
         """Returns the finish time when the job starts immediately, else
         queues it and returns None."""
         self._advance(now)
         if self.busy < self.capacity:
             return self._start(now, job)
-        self.queue.append(job)
-        self.queued_service += job.service
+        self._enqueue(job)
         return None
 
     def job_done(self, now: float) -> List[Tuple[_Job, float]]:
@@ -233,7 +341,7 @@ class GpuPool:
     def queue_delay_estimate(self) -> float:
         """Rough wait a newly queued job would see (admission hint).
         O(1): queued_service is maintained incrementally."""
-        if not self.queue:
+        if not self.queue_len():
             return 0.0
         return self.queued_service / max(1, self.capacity)
 
@@ -244,6 +352,173 @@ class GpuPool:
 
     def snapshot_integrals(self) -> Tuple[float, float]:
         return self._busy_integral, self._cap_integral
+
+
+# --------------------------------------------------------------------------
+# Heterogeneous dispatcher: per-class pools behind one routing surface
+# --------------------------------------------------------------------------
+class HeterogeneousDispatcher:
+    """Routes cloud jobs across per-class ``GpuPool``s.
+
+    ``deadline_aware=True`` ("edf" dispatch): a job goes to the CHEAPEST
+    class whose estimated finish (queue estimate + per-class service
+    time) still meets its cloud deadline; when none is feasible, to the
+    class finishing soonest.  ``deadline_aware=False`` ("fifo"): first
+    class (cheapest order) with a free GPU, else soonest-finish — the
+    deadline-blind baseline.
+
+    Per-class service time comes from ``cloud_gpu_time(..., r_cloud=
+    class rate)``, so a 0.5x spot GPU holds a job twice as long but at a
+    lower $/GPU-s weight.
+    """
+
+    def __init__(self, capacity: CloudCapacity, p: CostParams,
+                 discipline: str = "fifo"):
+        if discipline not in DISPATCH_MODES:
+            raise ValueError(f"unknown dispatch {discipline!r}; "
+                             f"expected one of {DISPATCH_MODES}")
+        self.capacity_spec = capacity
+        self.p = p
+        self.discipline = discipline
+        self.deadline_aware = discipline == "edf"
+        self.pools: Dict[str, GpuPool] = {
+            c.name: GpuPool(c.count, c.min_count, c.max_count, gpu_class=c,
+                            discipline=discipline)
+            for c in capacity}
+        self._order = capacity.cheapest_first()
+        # from the CLAMPED pool capacities (max(count, min_count)), not
+        # the raw class counts — min_count > count would under-report
+        self.peak_capacity = self.total_capacity
+
+    # -- aggregates --------------------------------------------------------
+    @property
+    def total_capacity(self) -> int:
+        return sum(pl.capacity for pl in self.pools.values())
+
+    @property
+    def total_busy(self) -> int:
+        return sum(pl.busy for pl in self.pools.values())
+
+    @property
+    def total_pending(self) -> int:
+        return sum(pl.pending for pl in self.pools.values())
+
+    @property
+    def gpu_seconds(self) -> float:
+        return sum(pl.gpu_seconds for pl in self.pools.values())
+
+    @property
+    def weighted_gpu_seconds(self) -> float:
+        return sum(pl.weighted_gpu_seconds for pl in self.pools.values())
+
+    @property
+    def released_total(self) -> int:
+        return sum(pl.released_total for pl in self.pools.values())
+
+    def queue_depth(self) -> int:
+        return sum(pl.queue_len() for pl in self.pools.values())
+
+    def current_counts(self) -> Dict[str, int]:
+        return {name: pl.capacity for name, pl in self.pools.items()}
+
+    def queue_delay_estimate(self) -> float:
+        """Optimistic admission hint: the least-backed-up class."""
+        return min(pl.queue_delay_estimate() for pl in self.pools.values())
+
+    def utilization(self, upto: float) -> float:
+        busy = cap = 0.0
+        for pl in self.pools.values():
+            pl._advance(upto)
+            b, c = pl.snapshot_integrals()
+            busy += b
+            cap += c
+        return busy / cap if cap > 0 else 0.0
+
+    def snapshot_integrals(self) -> Tuple[float, float]:
+        busy = cap = 0.0
+        for pl in self.pools.values():
+            b, c = pl.snapshot_integrals()
+            busy += b
+            cap += c
+        return busy, cap
+
+    def advance(self, now: float) -> None:
+        for pl in self.pools.values():
+            pl._advance(now)
+
+    # -- routing -----------------------------------------------------------
+    def service_on(self, cls: GpuClass, n_final: int,
+                   batch_factor: float) -> float:
+        return cloud_gpu_time(n_final, self.p, batch_factor,
+                              r_cloud=cls.r_cloud)
+
+    def route(self, now: float, n_final: int, batch_factor: float,
+              deadline: float) -> GpuClass:
+        """Pick the executing class for a job (see class docstring).
+
+        This is the queue-state-aware sibling of
+        ``core.scheduler.cheapest_feasible_class`` (the pure model-level
+        rule); keep their orderings in sync.  Classes with no capacity
+        and none pending are never routable — a job queued there would
+        strand forever (jobs stay in their routed class's queue, and the
+        spot-first autoscaler may never grow that class).
+        """
+        best, best_finish = None, math.inf
+        for cls in self._order:
+            pool = self.pools[cls.name]
+            if pool.capacity + pool.pending == 0:
+                continue
+            service = self.service_on(cls, n_final, batch_factor)
+            start = now if pool.busy < pool.capacity else (
+                now + pool.queue_delay_estimate())
+            finish = start + service
+            if self.deadline_aware:
+                if finish <= deadline + 1e-9:
+                    return cls
+            elif pool.busy < pool.capacity:
+                return cls
+            if finish < best_finish:
+                best, best_finish = cls, finish
+        if best is not None:
+            return best
+        # every pool is empty with nothing pending (possible at t=0 with
+        # autoscale on): queue where the spot-first autoscaler will grow
+        # capacity first
+        for cls in self.capacity_spec.scale_order():
+            if cls.max_count > 0:
+                return cls
+        return self._order[0]
+
+    def submit(self, now: float, job: _Job) -> Optional[float]:
+        pool = self.pools[job.gpu_class]
+        return pool.submit(now, job)
+
+    def job_done(self, now: float, job: _Job) -> List[Tuple[_Job, float]]:
+        return self.pools[job.gpu_class].job_done(now)
+
+    def add_capacity(self, now: float, name: str,
+                     k: int) -> List[Tuple[_Job, float]]:
+        started = self.pools[name].add_capacity(now, k)
+        self.peak_capacity = max(self.peak_capacity, self.total_capacity)
+        return started
+
+    def per_class_stats(self, upto: float) -> Dict[str, Dict]:
+        out = {}
+        for name, pl in self.pools.items():
+            out[name] = {
+                "gpus": pl.capacity,
+                "gpus_busy": pl.busy,
+                "gpus_pending": pl.pending,
+                "queue_depth": pl.queue_len(),
+                "gpu_seconds": pl.gpu_seconds,
+                "weighted_gpu_seconds": pl.weighted_gpu_seconds,
+                "released": pl.released_total,
+                "peak": pl.peak_capacity,
+                "utilization": pl.utilization(upto),
+                "preemptible": bool(pl.gpu_class.preemptible
+                                    if pl.gpu_class else False),
+            }
+        return out
 
 
 # --------------------------------------------------------------------------
@@ -263,9 +538,16 @@ class FleetSimResult:
     released_gpus: int
     final_gpus: int
     utilization: float
+    total_gpu_cost: float = 0.0         # cost_weight-scaled GPU-seconds
+    per_class: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+    dispatch: str = "fifo"
+    final_t_lim: float = 0.0            # t_lim after adaptive-SLA updates
 
     def gpu_seconds_per_request(self) -> float:
         return self.total_gpu_seconds / max(1, len(self.completed))
+
+    def gpu_cost_per_request(self) -> float:
+        return self.total_gpu_cost / max(1, len(self.completed))
 
     def latency_percentile(self, q: float) -> float:
         lats = [c.latency for c in self.completed]
@@ -276,14 +558,21 @@ class FleetSimResult:
             return 0.0
         return sum(c.batched for c in self.completed) / len(self.completed)
 
+    def violation_rate(self) -> float:
+        return self.violations / max(1, len(self.completed))
+
     def to_json(self) -> Dict:
         return {
             "policy": self.policy,
+            "dispatch": self.dispatch,
             "n_arrivals": self.n_arrivals,
             "n_completed": len(self.completed),
             "violations": self.violations,
+            "violation_rate": self.violation_rate(),
             "total_gpu_seconds": self.total_gpu_seconds,
+            "total_gpu_cost": self.total_gpu_cost,
             "gpu_seconds_per_request": self.gpu_seconds_per_request(),
+            "gpu_cost_per_request": self.gpu_cost_per_request(),
             "p50_latency": self.latency_percentile(50),
             "p99_latency": self.latency_percentile(99),
             "batched_fraction": self.batched_fraction(),
@@ -291,6 +580,8 @@ class FleetSimResult:
             "released_gpus": self.released_gpus,
             "final_gpus": self.final_gpus,
             "utilization": self.utilization,
+            "final_t_lim": self.final_t_lim,
+            "per_class": self.per_class,
             "timeseries": self.timeseries,
         }
 
@@ -313,17 +604,22 @@ def _make_arrivals(cfg: SimConfig) -> Iterator[float]:
 class FleetSimulator:
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
-        self.p = cfg.params
+        self.capacity_spec = cfg.build_capacity()
+        # CostParams.r_cloud is the REFERENCE rate: for a heterogeneous
+        # capacity the closed-form solves see the count-weighted mean;
+        # for the default homogeneous pool this is exactly cfg.params.
+        self.p = reference_params(cfg.params, self.capacity_spec)
         fleet = cfg.fleet
         if fleet is None:
             fleet = table4_fleet(seed=cfg.seed, params=self.p)
         if not fleet:
             raise ValueError("SimConfig.fleet is empty")
-        if not cfg.autoscale and max(cfg.gpus_init, cfg.min_gpus) <= 0:
+        if not cfg.autoscale and all(
+                max(c.count, c.min_count) <= 0 for c in self.capacity_spec):
             # only the autoscaler can ever add capacity; a fixed empty
             # pool would queue cloud jobs forever and the run never ends
-            raise ValueError("autoscale=False requires gpus_init or "
-                             "min_gpus > 0")
+            raise ValueError("autoscale=False requires provisioned or "
+                             "min capacity > 0")
         self.scheduler = make_scheduler(cfg.policy, self.p,
                                         worst_rtt=fleet[0].rtt,
                                         batch_size=cfg.batch_size)
@@ -337,8 +633,20 @@ class FleetSimulator:
         self.devices = fleet_sampler(fleet, seed=cfg.seed + 1,
                                      mode=cfg.sampling)
         self.arrivals = _make_arrivals(cfg)
-        self.pool = GpuPool(cfg.gpus_init, cfg.min_gpus, cfg.max_gpus)
+        self.pool = HeterogeneousDispatcher(self.capacity_spec, self.p,
+                                            discipline=cfg.dispatch)
         self.tracker = DeadlineTracker()
+        # §7 adaptive SLA: observed utilization relaxes/tightens t_lim
+        # for FUTURE arrivals (in-flight deadlines are contracts)
+        self._t_lim_now = self.p.t_lim
+        self.sla_ctl = None
+        if cfg.adaptive_sla:
+            self.sla_ctl = AdaptiveSLAController(
+                SLAPolicy(t_lim=self.p.t_lim, t_floor=cfg.sla_floor,
+                          t_ceil=cfg.sla_ceil),
+                high_water=cfg.sla_high_water, low_water=cfg.sla_low_water)
+        self._as_last_busy_int = 0.0
+        self._as_last_cap_int = 0.0
         self.windows: Dict[int, _Window] = {}
         self._win_version = itertools.count()
         self._events: List[Tuple[float, int, int, object]] = []
@@ -400,7 +708,24 @@ class FleetSimulator:
             total_gpu_seconds=self.pool.gpu_seconds,
             peak_gpus=self.pool.peak_capacity,
             released_gpus=self.pool.released_total,
-            final_gpus=self.pool.capacity, utilization=util)
+            final_gpus=self.pool.total_capacity, utilization=util,
+            total_gpu_cost=self.pool.weighted_gpu_seconds,
+            per_class=self.pool.per_class_stats(last_t),
+            dispatch=cfg.dispatch, final_t_lim=self._t_lim_now)
+
+    # -- adaptive SLA ------------------------------------------------------
+    def _set_t_lim(self, t_lim: float) -> None:
+        """Apply a new SLA target to FUTURE arrivals: the per-request
+        solver (scheduler) and the batching admission both see it;
+        in-flight deadlines are unchanged (they are contracts fixed at
+        arrival — see core.sla.RequestDeadline)."""
+        if t_lim == self._t_lim_now:
+            return
+        self._t_lim_now = t_lim
+        newp = dataclasses.replace(self.p, t_lim=t_lim)
+        self.scheduler.p = newp
+        if self.admission is not None:
+            self.admission.p = newp
 
     # -- handlers ----------------------------------------------------------
     def _on_arrival(self, t: float) -> None:
@@ -410,7 +735,7 @@ class FleetSimulator:
         a = self.scheduler.assign_one(prof)
         req = SimRequest(request_id=rid, arrival=t, profile=prof,
                          assignment=a)
-        self.tracker.open(rid, t, self.p.t_lim)
+        self.tracker.open(rid, t, self._t_lim_now)
         self._demand.append((t, a.n_final))
 
         if a.n_final <= 0:
@@ -466,6 +791,23 @@ class FleetSimulator:
             m.window_wait = t - m.arrival
         self._dispatch(t, w.members)
 
+    def _cloud_deadline(self, members: List[SimRequest]) -> float:
+        """Latest time the CLOUD part may finish: the tightest member's
+        e2e deadline (from the DeadlineTracker clock opened at arrival)
+        minus its post-cloud tail (rtt + remaining device iterations +
+        decode)."""
+        dl = math.inf
+        for m in members:
+            d = self.tracker.get(m.request_id)
+            if d is None:
+                continue
+            tail = (m.profile.rtt
+                    + (self.p.n_total - m.assignment.n_final)
+                    / m.profile.r_dev
+                    + self.p.k_decode / m.profile.r_dev)
+            dl = min(dl, d.deadline - tail)
+        return dl
+
     def _dispatch(self, t: float, members: List[SimRequest]) -> None:
         """Submit one cloud job for ``members`` (same n_final group)."""
         n_final = members[0].assignment.n_final
@@ -475,14 +817,19 @@ class FleetSimulator:
         # at batch 2; other sizes extrapolate through the §4.4 linear
         # micro-model); a solo run pays no batching penalty
         cb = c_batch_at(self._c_batch_2, b) if batched else 1.0
-        service = cloud_gpu_time(n_final, self.p, cb)
+        deadline = self._cloud_deadline(members)
+        cls = self.pool.route(t, n_final, cb, deadline)
+        service = self.pool.service_on(cls, n_final, cb)
         for m in members:
             m.batched = batched
             m.batch_slowdown = cb
             m.cloud_service = service
             m.gpu_seconds = service / b
+            m.gpu_class = cls.name
+            m.gpu_cost = m.gpu_seconds * cls.cost_weight
+            m.cloud_rate = cls.r_cloud
         job = _Job(group=n_final, members=members, service=service,
-                   submitted=t)
+                   submitted=t, deadline=deadline, gpu_class=cls.name)
         finish = self.pool.submit(t, job)
         if finish is not None:
             self._push(finish, EVT_JOB_DONE, job)
@@ -495,15 +842,28 @@ class FleetSimulator:
                     + (self.p.n_total - a.n_final) / m.profile.r_dev
                     + self.p.k_decode / m.profile.r_dev)
             self._push(done, EVT_COMPLETE, m)
-        for nxt, finish in self.pool.job_done(t):
+        for nxt, finish in self.pool.job_done(t, job):
             self._push(finish, EVT_JOB_DONE, nxt)
 
-    def _on_capacity(self, t: float, k: int) -> None:
-        for job, finish in self.pool.add_capacity(t, k):
+    def _on_capacity(self, t: float, payload) -> None:
+        name, k = payload
+        for job, finish in self.pool.add_capacity(t, name, k):
             self._push(finish, EVT_JOB_DONE, job)
 
     def _on_autoscale(self, t: float) -> None:
         cfg = self.cfg
+        if self.sla_ctl is not None:
+            # couple the §7 controller to utilization observed since the
+            # last re-plan: sustained pressure relaxes t_lim (more device
+            # work per request) instead of violating deadlines
+            self.pool.advance(t)
+            busy_int, cap_int = self.pool.snapshot_integrals()
+            d_busy = busy_int - self._as_last_busy_int
+            d_cap = cap_int - self._as_last_cap_int
+            self._as_last_busy_int = busy_int
+            self._as_last_cap_int = cap_int
+            if d_cap > 0:
+                self._set_t_lim(self.sla_ctl.update(d_busy / d_cap))
         while self._demand and self._demand[0][0] < t - cfg.horizon_s:
             self._demand.popleft()
         wg = group_workloads(n for _, n in self._demand)
@@ -515,18 +875,21 @@ class FleetSimulator:
         # demand ~(horizon/t)x and release the warm pool into a queue
         # transient — normalize by the window actually observed
         seen = min(cfg.horizon_s, t)
-        plan = allocate_gpus(summary, self.p, n_gpus=self.pool.capacity,
-                             horizon_s=seen,
-                             release_threshold=cfg.release_threshold)
-        want = math.ceil(plan.gpus_needed * cfg.headroom)
-        target = min(max(want, cfg.min_gpus), cfg.max_gpus)
-        provisioned_total = self.pool.capacity + self.pool.pending
-        if target > provisioned_total:
-            k = target - provisioned_total
-            self.pool.pending += k
-            self._push(t + cfg.provision_delay_s, EVT_CAPACITY, k)
-        elif plan.release_gpus and target < self.pool.capacity:
-            self.pool.release_to(t, target)
+        plan = allocate_gpus_heterogeneous(
+            summary, self.p, self.capacity_spec,
+            current=self.pool.current_counts(), horizon_s=seen,
+            headroom=cfg.headroom,
+            release_threshold=cfg.release_threshold)
+        for name, target in plan.targets.items():
+            pl = self.pool.pools[name]
+            provisioned_total = pl.capacity + pl.pending
+            if target > provisioned_total:
+                k = target - provisioned_total
+                pl.pending += k
+                self._push(t + cfg.provision_delay_s, EVT_CAPACITY,
+                           (name, k))
+            elif plan.release_gpus and target < pl.capacity:
+                pl.release_to(t, target)
         if self._active():
             self._push(t + cfg.autoscale_interval_s, EVT_AUTOSCALE)
 
@@ -536,7 +899,8 @@ class FleetSimulator:
         # no-queue latency floor at the rate the job actually ran (waits
         # and queues only ADD to this)
         lower = e2e_latency(a.n_final, req.profile.r_dev, self.p,
-                            req.profile.rtt, c_batch=req.batch_slowdown)
+                            req.profile.rtt, c_batch=req.batch_slowdown,
+                            r_cloud=req.cloud_rate or None)
         self.completed.append(CompletedRequest(
             request_id=req.request_id, device_id=req.profile.device_id,
             arrival=req.arrival, n_final=a.n_final,
@@ -544,11 +908,12 @@ class FleetSimulator:
             batched=req.batched, window_wait=req.window_wait,
             queue_wait=req.queue_wait, cloud_service=req.cloud_service,
             gpu_seconds=req.gpu_seconds, completion=t,
-            latency=t - req.arrival, lower_bound=lower, violated=late))
+            latency=t - req.arrival, lower_bound=lower, violated=late,
+            gpu_class=req.gpu_class, gpu_cost=req.gpu_cost))
         self._recent_lat.append(t - req.arrival)
 
     def _on_metrics(self, t: float) -> None:
-        self.pool._advance(t)
+        self.pool.advance(t)
         busy_int, cap_int = self.pool.snapshot_integrals()
         d_busy = busy_int - self._last_busy_int
         d_cap = cap_int - self._last_cap_int
@@ -571,16 +936,21 @@ class FleetSimulator:
             "violations": self.tracker.violations,
             "p50_latency": pct(0.50),
             "p99_latency": pct(0.99),
-            "queue_depth": len(self.pool.queue),
+            "queue_depth": self.pool.queue_depth(),
             "window_depth": sum(len(w.members)
                                 for w in self.windows.values()),
-            "gpus": self.pool.capacity,
-            "gpus_pending": self.pool.pending,
-            "gpus_busy": self.pool.busy,
+            "gpus": self.pool.total_capacity,
+            "gpus_pending": self.pool.total_pending,
+            "gpus_busy": self.pool.total_busy,
             "utilization": (d_busy / d_cap) if d_cap > 0 else 0.0,
             "gpu_seconds": self.pool.gpu_seconds,
-            # tightest open deadline: what an EDF dispatcher (ROADMAP)
-            # or a pressure-aware SLA controller would watch
+            "gpu_cost": self.pool.weighted_gpu_seconds,
+            "t_lim": self._t_lim_now,
+            "per_class": {name: {"gpus": pl.capacity, "busy": pl.busy,
+                                 "queue": pl.queue_len()}
+                          for name, pl in self.pool.pools.items()},
+            # tightest open deadline: what the EDF dispatcher and a
+            # pressure-aware SLA controller watch
             "min_slack": self.tracker.min_slack(t),
         })
         if self._active():

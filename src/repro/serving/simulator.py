@@ -63,6 +63,30 @@ def run_table4(n_devices: int = 1000, seed: int = 0,
 POLICIES = ("all_cloud", "constant", "variable", "variable+batching")
 
 
+def table4_capacity(params: CostParams = CALIBRATED, base_count: int = 8,
+                    spot_count: int = 8, spot_ratio: float = 0.5,
+                    base_max: int = 128, spot_max: int = 128,
+                    spot_discount: float = 0.6):
+    """The calibrated heterogeneous pool: the Table-4 reference class
+    plus preemptible spot GPUs at ``spot_ratio`` of its rate and
+    spot-market pricing (rate-proportional cost x ``spot_discount``).
+
+    This is the 2-class configuration the heterogeneity experiments use
+    (fast + 0.5x spot); with ``spot_count=0`` + ``spot_max=0`` it
+    degenerates to the homogeneous Table-4 pool.
+    """
+    from repro.core.capacity import CloudCapacity, GpuClass
+    classes = [GpuClass(name="base", r_cloud=params.r_cloud,
+                        count=base_count, min_count=1, max_count=base_max)]
+    if spot_max > 0:
+        classes.append(GpuClass(
+            name="spot", r_cloud=params.r_cloud * spot_ratio,
+            count=spot_count, preemptible=True,
+            cost_weight=spot_ratio * spot_discount, min_count=0,
+            max_count=spot_max))
+    return CloudCapacity(tuple(classes))
+
+
 def make_scheduler(name: str, params: CostParams,
                    worst_r_dev: float = SLOWEST_DEVICE,
                    worst_rtt: float = 0.3, batch_size: int = 2):

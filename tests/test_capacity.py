@@ -1,0 +1,242 @@
+"""Heterogeneous-capacity model: GpuClass/CloudCapacity invariants,
+class-aware dispatch + §4.5 per-class allocation, and the roofline
+calibration path (hypothesis + fixed-case, per tests/conftest.py)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.capacity import CloudCapacity, GpuClass, reference_params
+from repro.core.cost_model import CostParams, cloud_gpu_time, e2e_latency
+from repro.core.scheduler import (
+    ScheduleSummary,
+    allocate_gpus,
+    allocate_gpus_heterogeneous,
+    cheapest_feasible_class,
+)
+
+P = CostParams(r_cloud=62.5, n_total=50, n_step=5, t_lim=8.5,
+               k_decode=2.0, c_batch=1.6)
+
+
+def two_class(base_count=8, spot_count=8):
+    return CloudCapacity((
+        GpuClass("base", r_cloud=62.5, count=base_count, min_count=1,
+                 max_count=64),
+        GpuClass("spot", r_cloud=31.25, count=spot_count, preemptible=True,
+                 cost_weight=0.3, max_count=64),
+    ))
+
+
+# --------------------------------------------------------------------------
+# Construction + validation
+# --------------------------------------------------------------------------
+def test_gpu_class_validation():
+    with pytest.raises(ValueError):
+        GpuClass("x", r_cloud=0.0, count=1)
+    with pytest.raises(ValueError):
+        GpuClass("x", r_cloud=1.0, count=1, min_count=5, max_count=2)
+    with pytest.raises(ValueError):
+        GpuClass("x", r_cloud=1.0, count=99, max_count=8)
+    with pytest.raises(ValueError):
+        GpuClass("x", r_cloud=1.0, count=1, cost_weight=0.0)
+
+
+def test_capacity_validation():
+    with pytest.raises(ValueError):
+        CloudCapacity(())
+    c = GpuClass("dup", r_cloud=1.0, count=1)
+    with pytest.raises(ValueError):
+        CloudCapacity((c, c))
+
+
+def test_reference_rate_and_params_bridge():
+    """Homogeneous: exactly the class rate.  Mixed: count-weighted mean.
+    reference_params derives the scalar CostParams the solves use."""
+    homo = CloudCapacity.from_scalar(62.5, count=8)
+    assert homo.reference_rate() == 62.5
+    assert reference_params(P, homo) == P         # bit-identical bridge
+    cap = two_class(base_count=8, spot_count=8)
+    assert abs(cap.reference_rate() - (62.5 + 31.25) / 2) < 1e-12
+    p2 = reference_params(P, cap)
+    assert p2.r_cloud == cap.reference_rate() and p2.t_lim == P.t_lim
+
+
+def test_json_roundtrip():
+    cap = two_class()
+    assert CloudCapacity.from_json(cap.to_json()) == cap
+
+
+# --------------------------------------------------------------------------
+# plan_counts: spot-first scaling, scalar equivalence
+# --------------------------------------------------------------------------
+@given(r=st.floats(10.0, 100.0), current=st.integers(0, 64),
+       want=st.integers(0, 80), min_c=st.integers(0, 8))
+@settings(max_examples=100, deadline=None)
+def test_plan_counts_scalar_equivalence(r, current, want, min_c):
+    """Single class: plan_counts == clamp(want, min, max) — the exact
+    legacy autoscaler arithmetic the golden trace pins."""
+    cap = CloudCapacity.from_scalar(r, count=8, min_count=min_c,
+                                    max_count=64)
+    current = max(current, min_c)
+    targets = cap.plan_counts(want * r, {"default": current})
+    assert targets["default"] == min(max(want, min_c), 64)
+
+
+def test_plan_counts_scales_spot_first():
+    cap = two_class(base_count=4, spot_count=0)
+    # need 4*62.5 + 4*31.25 more than base alone supplies
+    targets = cap.plan_counts(4 * 62.5 + 125.0, {"base": 4, "spot": 0})
+    assert targets["base"] == 4          # base untouched
+    assert targets["spot"] == 4          # growth landed on spot
+
+
+def test_plan_counts_releases_spot_first():
+    cap = two_class(base_count=8, spot_count=8)
+    targets = cap.plan_counts(8 * 62.5, {"base": 8, "spot": 8})
+    assert targets["base"] == 8
+    assert targets["spot"] == 0          # the whole release came from spot
+
+
+def test_plan_counts_respects_bounds():
+    cap = two_class()
+    targets = cap.plan_counts(1e9, {"base": 8, "spot": 8})
+    assert targets == {"base": 64, "spot": 64}      # max_count caps
+    targets = cap.plan_counts(0.0, {"base": 8, "spot": 8})
+    assert targets == {"base": 1, "spot": 0}        # min_count floors
+
+
+# --------------------------------------------------------------------------
+# Class-aware dispatch + §4.5 per-class allocation
+# --------------------------------------------------------------------------
+def test_cheapest_feasible_class_picks_cheapest_then_falls_back():
+    cap = two_class()
+    # loose SLA: the slow cheap spot class still meets it -> chosen
+    loose = CostParams(r_cloud=62.5, n_total=50, n_step=5, t_lim=30.0,
+                       k_decode=2.0)
+    assert cheapest_feasible_class(35, 2.25, 0.3, loose, cap).name == "spot"
+    # tight SLA: only the fast base class meets it
+    tight = CostParams(r_cloud=62.5, n_total=50, n_step=5, t_lim=8.6,
+                       k_decode=2.0)
+    assert cheapest_feasible_class(35, 2.25, 0.3, tight, cap).name == "base"
+    # infeasible everywhere: fall back to the fastest class (best effort)
+    hopeless = CostParams(r_cloud=62.5, n_total=50, n_step=5, t_lim=0.1,
+                          k_decode=2.0)
+    assert (cheapest_feasible_class(50, 2.25, 0.3, hopeless, cap).name
+            == "base")
+    # feasibility matches the latency model it claims to enforce
+    lat = e2e_latency(35, 2.25, loose, 0.3, r_cloud=31.25)
+    assert lat <= loose.t_lim
+
+
+@given(want=st.integers(0, 40), current=st.integers(1, 32))
+@settings(max_examples=60, deadline=None)
+def test_allocate_heterogeneous_matches_scalar_for_single_class(want,
+                                                                current):
+    """Homogeneous capacity: the hetero §4.5 plan reproduces the scalar
+    allocate_gpus + headroom + clamp arithmetic exactly."""
+    cap = CloudCapacity.from_scalar(P.r_cloud, count=8, min_count=1,
+                                    max_count=128)
+    wg = {35: float(want * 35)}
+    summary = ScheduleSummary(name="variable", assignments=[],
+                              total_gpu_time=0.0, latencies=[],
+                              violations=0, group_workloads=wg)
+    horizon = 30.0
+    headroom = 1.3
+    plan = allocate_gpus_heterogeneous(summary, P, cap,
+                                       current={"default": current},
+                                       horizon_s=horizon, headroom=headroom)
+    ref = allocate_gpus(summary, P, n_gpus=current, horizon_s=horizon)
+    legacy_target = min(max(math.ceil(ref.gpus_needed * headroom), 1), 128)
+    assert plan.targets["default"] == legacy_target
+    assert plan.release_gpus == ref.release_gpus
+
+
+def test_allocate_heterogeneous_meets_supply():
+    cap = two_class(base_count=4, spot_count=4)
+    wg = {40: 40.0 * 200}               # heavy demand
+    summary = ScheduleSummary(name="variable", assignments=[],
+                              total_gpu_time=0.0, latencies=[],
+                              violations=0, group_workloads=wg)
+    plan = allocate_gpus_heterogeneous(
+        summary, P, cap, current={"base": 4, "spot": 4}, horizon_s=30.0)
+    got = cap.supply(plan.targets)
+    assert got >= min(plan.needed_supply,
+                      cap.supply({"base": 64, "spot": 64}))
+
+
+# --------------------------------------------------------------------------
+# Roofline calibration path
+# --------------------------------------------------------------------------
+def test_r_cloud_estimates_orders_by_hardware():
+    from repro.roofline.analysis import HW_SPECS, r_cloud_estimates
+    flops, byts = 5e12, 1e10            # compute-bound step
+    est = r_cloud_estimates(flops, byts)
+    assert set(est) == set(HW_SPECS)
+    assert est["h100"] > est["a100"] > est["v5e"]   # peak-FLOPS order
+    # compute-bound: rate == peak/flops for each class
+    for hw, spec in HW_SPECS.items():
+        if flops / spec.peak_flops >= byts / spec.hbm_bw:
+            assert abs(est[hw] - spec.peak_flops / flops) < 1e-6
+
+
+def test_capacity_from_roofline_records():
+    """CloudCapacity.from_roofline consumes dryrun.jsonl-style records:
+    estimates average across records, cost weights are rate-proportional
+    with the spot discount."""
+    records = [
+        {"arch": "sd", "cell": "decode", "r_cloud_est": {"h100": 100.0,
+                                                         "a100": 50.0}},
+        {"arch": "sd", "cell": "decode", "r_cloud_est": {"h100": 120.0,
+                                                         "a100": 70.0}},
+        {"arch": "sd", "cell": "train_4k", "r_cloud_est": {"h100": 1.0}},
+        {"arch": "sd", "cell": "decode", "status": "FAIL"},
+    ]
+    cap = CloudCapacity.from_roofline(
+        records, counts={"h100": 4, "a100": 8}, preemptible=("a100",),
+        cell="decode")
+    assert cap["h100"].r_cloud == 110.0          # mean of 100, 120
+    assert cap["a100"].r_cloud == 60.0
+    assert cap["h100"].count == 4 and cap["a100"].count == 8
+    assert cap["a100"].preemptible and not cap["h100"].preemptible
+    assert cap["h100"].cost_weight == 1.0        # reference class
+    assert abs(cap["a100"].cost_weight - (60.0 / 110.0) * 0.6) < 1e-12
+    with pytest.raises(ValueError):
+        CloudCapacity.from_roofline([{"r_cloud_est": {}}], counts={})
+
+
+def test_dryrun_write_capacity(tmp_path):
+    """launch.dryrun.write_capacity aggregates records into the capacity
+    artifact CloudCapacity.from_json can reload."""
+    import json
+
+    from repro.launch.dryrun import write_capacity
+    records = [{"cell": "decode", "r_cloud_est": {"v5e": 40.0,
+                                                  "h100": 90.0}}]
+    out = tmp_path / "capacity.json"
+    n = write_capacity(records, str(out))
+    assert n == 2
+    cap = CloudCapacity.from_json(json.loads(out.read_text()))
+    assert {c.name for c in cap} == {"v5e", "h100"}
+    assert cap["h100"].r_cloud == 90.0
+    assert write_capacity([{"status": "FAIL"}], str(out)) == 0
+
+
+# --------------------------------------------------------------------------
+# Class-aware cost-model variants
+# --------------------------------------------------------------------------
+@given(n=st.integers(0, 50), r_dev=st.floats(0.5, 5.0),
+       rtt=st.floats(0.0, 1.0), rc=st.floats(10.0, 200.0))
+@settings(max_examples=100, deadline=None)
+def test_rate_override_consistency(n, r_dev, rtt, rc):
+    """The r_cloud override equals substituting the rate into params —
+    one model, two spellings."""
+    import dataclasses
+    p_sub = dataclasses.replace(P, r_cloud=rc)
+    assert (e2e_latency(n, r_dev, P, rtt, r_cloud=rc)
+            == e2e_latency(n, r_dev, p_sub, rtt))
+    assert (cloud_gpu_time(n, P, 0.8, r_cloud=rc)
+            == cloud_gpu_time(n, p_sub, 0.8))
+    # default (no override) unchanged
+    assert e2e_latency(n, r_dev, P, rtt) == e2e_latency(n, r_dev, P, rtt,
+                                                        r_cloud=None)

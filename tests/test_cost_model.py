@@ -6,6 +6,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.cost_model import (
     CostParams,
     batchable,
+    c_batch_at,
     c_batch_of,
     e2e_latency,
     fit_batch_model,
@@ -95,3 +96,38 @@ def test_batch_model_fit_recovers_params(t_startup, t_task):
     assert abs(s - t_startup) < 1e-6 * max(1, t_startup)
     assert abs(t - t_task) < 1e-6 * max(1, t_task)
     assert c_batch_of(1, s, t) == 1.0
+
+
+# --------------------------------------------------------------------------
+# c_batch_at: batch-b slowdown extrapolated from the batch-2 measurement
+# --------------------------------------------------------------------------
+def test_c_batch_at_fixed_points():
+    """b <= 1 pays no penalty, b == 2 returns the measurement bitwise,
+    b > 2 follows the §4.4 linear micro-model c(b) = 1 + (c(2)-1)(b-1)."""
+    assert c_batch_at(1.6, 0) == 1.0
+    assert c_batch_at(1.6, 1) == 1.0
+    assert c_batch_at(1.6, 2) == 1.6          # the measurement itself
+    assert abs(c_batch_at(1.6, 3) - 2.2) < 1e-12
+    assert abs(c_batch_at(1.6, 4) - 2.8) < 1e-12
+    assert abs(c_batch_at(1.6, 8) - 5.2) < 1e-12
+
+
+def test_c_batch_at_matches_linear_micro_model():
+    """Extrapolating from c(2) reproduces c_batch_of exactly for any
+    (t_startup, t_task) that produced that c(2)."""
+    t_startup, t_task = 0.4, 0.6              # -> c(2) = 1.6
+    c2 = c_batch_of(2, t_startup, t_task)
+    assert abs(c2 - 1.6) < 1e-12
+    for b in range(2, 10):
+        want = c_batch_of(b, t_startup, t_task)
+        assert abs(c_batch_at(c2, b) - want) < 1e-9
+
+
+@given(st.floats(0.001, 1.0), st.floats(0.001, 1.0), st.integers(2, 16))
+@settings(max_examples=100, deadline=None)
+def test_c_batch_at_consistent_with_fit(t_startup, t_task, b):
+    """Property form: the single-measurement extrapolation agrees with
+    the full linear model at every batch size, and grows monotonically."""
+    c2 = c_batch_of(2, t_startup, t_task)
+    assert abs(c_batch_at(c2, b) - c_batch_of(b, t_startup, t_task)) < 1e-6
+    assert c_batch_at(c2, b + 1) >= c_batch_at(c2, b) - 1e-12

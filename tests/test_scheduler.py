@@ -91,3 +91,62 @@ def test_projection_monotone():
     assert r[0] > r[1] > r[2]
     assert b[0] > b[1] > b[2]
     assert all(bb < rr for bb, rr in zip(b, r))
+
+
+# --------------------------------------------------------------------------
+# batch_size > 2: triple grouping + leftover handling
+# --------------------------------------------------------------------------
+def test_batching_scheduler_batch3_pairing_and_leftovers():
+    """7 batchable same-group requests at batch_size=3 form two full
+    triples; the leftover runs solo at full price."""
+    from repro.core.cost_model import c_batch_at
+    from repro.core.telemetry import DeviceProfile
+    p = CostParams(r_cloud=62.5, n_total=50, n_step=5, t_lim=8.5,
+                   k_decode=2.0, c_batch=1.6)
+    fleet = [DeviceProfile(device_id=f"d{i}", r_dev=2.5, k_decode=2.0)
+             for i in range(7)]
+    s = IntelligentBatchingScheduler(p, c_batch=1.6, batch_size=3)
+    c3 = c_batch_at(1.6, 3)                       # 2.2 via linear model
+    assert abs(s.c_batch - c3) < 1e-12
+    asg = s.schedule(fleet)
+    assert len({a.n_final for a in asg}) == 1     # one group
+    batched = [a for a in asg if a.batched]
+    solo = [a for a in asg if not a.batched]
+    assert len(batched) == 6 and len(solo) == 1   # 7 = 2 triples + 1 left
+    n = batched[0].n_final
+    for a in batched:
+        assert abs(a.batch_factor - c3 / 3.0) < 1e-12
+        assert abs(a.gpu_time(p) - n * c3 / 3.0 / p.r_cloud) < 1e-12
+        assert a.feasible
+    assert solo[0].batch_factor == 1.0
+    assert abs(solo[0].gpu_time(p) - n / p.r_cloud) < 1e-12
+
+
+def test_batching_scheduler_batch3_cheaper_than_batch2():
+    """c(3)/3 < c(2)/2 for c(2)=1.6, so triples save more GPU time than
+    pairs on the same fleet (leftovers equal: 7 % 2 == 7 % 3 == 1)."""
+    from repro.core.telemetry import DeviceProfile
+    p = CostParams(r_cloud=62.5, n_total=50, n_step=5, t_lim=8.5,
+                   k_decode=2.0, c_batch=1.6)
+    fleet = [DeviceProfile(device_id=f"d{i}", r_dev=2.5, k_decode=2.0)
+             for i in range(7)]
+    t2 = IntelligentBatchingScheduler(p, c_batch=1.6,
+                                      batch_size=2).summarize(fleet)
+    t3 = IntelligentBatchingScheduler(p, c_batch=1.6,
+                                      batch_size=3).summarize(fleet)
+    assert t3.total_gpu_time < t2.total_gpu_time - 1e-9
+
+
+def test_batching_scheduler_batch3_no_discount_when_unprofitable():
+    """When c(b) >= b the batched flag may be set (admission) but the
+    GPU-time discount must NOT apply: total equals plain variable."""
+    from repro.core.telemetry import DeviceProfile
+    # c(2) = 2.1 -> c(3) = 1 + 1.1*2 = 3.2 >= 3: batching wastes time
+    p = CostParams(r_cloud=62.5, n_total=50, n_step=5, t_lim=8.5,
+                   k_decode=2.0, c_batch=2.1)
+    fleet = [DeviceProfile(device_id=f"d{i}", r_dev=2.5, k_decode=2.0)
+             for i in range(6)]
+    bat = IntelligentBatchingScheduler(p, c_batch=2.1,
+                                       batch_size=3).summarize(fleet)
+    var = VariableIterationScheduler(p).summarize(fleet)
+    assert abs(bat.total_gpu_time - var.total_gpu_time) < 1e-12
