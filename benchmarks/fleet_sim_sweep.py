@@ -25,10 +25,11 @@ import argparse
 import json
 import time
 
-from repro.serving.fleet_sim import SimConfig, run_fleet_sim
-from repro.serving.simulator import (
+from repro.api import (
     CALIBRATED,
     POLICIES,
+    SimConfig,
+    run_fleet_sim,
     table4_capacity,
     table4_fleet,
 )
@@ -98,6 +99,22 @@ def hetero_comparison(seed=0, rate=HETERO["rate"],
     return out
 
 
+def sample_decision(seed=0):
+    """One audited PlanDecision on the Table-4 reference device — the
+    unified-planner protocol record (JSON-replayable; drift in the
+    facade shows up as a diff here before it breaks users)."""
+    from repro.api import PlanRequest, Planner, replay
+    fleet = table4_fleet(seed=seed)
+    planner = Planner(CALIBRATED, policy="variable+batching",
+                      capacity=table4_capacity(), dispatch="edf",
+                      worst_rtt=fleet[0].rtt)
+    decision = planner.plan(PlanRequest(device=fleet[0],
+                                        request_id="bench-sample"))
+    payload = decision.to_json()
+    assert replay(payload).to_json() == payload   # deterministic replay
+    return payload
+
+
 def bench(smoke=False, seed=0):
     """The BENCH_fleet_sim.json payload: policy x rate grid -> cloud
     GPU-s / p99 / violation rate, plus the heterogeneous dispatch cell."""
@@ -111,6 +128,7 @@ def bench(smoke=False, seed=0):
         HETERO["duration"],
         period_s=SMOKE_DURATION * 2 if smoke else HETERO["period_s"])
     return {
+        "planner_sample": sample_decision(seed=seed),
         "bench": "fleet_sim_sweep",
         "smoke": smoke,
         "seed": seed,

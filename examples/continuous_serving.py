@@ -7,30 +7,66 @@ show: load rising and falling, batching windows pairing requests, the
 §4.5 autoscaler growing the GPU pool into the peak and releasing idle
 GPUs back to production jobs in the trough.
 
-    PYTHONPATH=src python examples/continuous_serving.py
+Everything imports from the ``repro.api`` facade; the prologue also
+shows the unified planner protocol directly — one PlanRequest in, one
+explained + replayable PlanDecision out.
+
+    PYTHONPATH=src python examples/continuous_serving.py [--smoke]
 
 The second act reruns the same day on the heterogeneous 2-class pool
 (base + 0.5x preemptible spot) with EDF dispatch: jobs route to the
-cheapest GPU class that still meets their deadline, the autoscaler
-grows/releases the spot slice first, and the per-class breakdown shows
-where the GPU-seconds (and dollars) went.
+cheapest GPU class that still meets their deadline, and the
+deadline-aware allocator grows the RESERVED class for demand that spot
+is too slow to serve — the starvation caveat the old spot-first-only
+scaling had at spot_ratio=0.5 (docs/capacity.md), now fixed.
 """
-from repro.serving.fleet_sim import SimConfig, run_fleet_sim
-from repro.serving.simulator import CALIBRATED, run_table4, table4_capacity
+import argparse
+
+from repro.api import (
+    CALIBRATED,
+    DeviceProfile,
+    PlanRequest,
+    Planner,
+    SimConfig,
+    replay,
+    run_fleet_sim,
+    run_table4,
+    table4_capacity,
+)
+
+
+def planner_prologue():
+    """The one-decision protocol every surface below is built on."""
+    planner = Planner(CALIBRATED, policy="variable+batching",
+                      capacity=table4_capacity(), dispatch="edf")
+    decision = planner.plan(PlanRequest(
+        device=DeviceProfile("iphone-12-mini", r_dev=1.44, rtt=0.3),
+        request_id="demo"))
+    print("== one request, one decision (repro.api.Planner) ==")
+    print(decision.explain())
+    assert replay(decision.to_json()).to_json() == decision.to_json()
+    print("decision serialized + replayed deterministically\n")
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short CI run (~1 compressed day in <15 s)")
+    args = ap.parse_args()
+
+    planner_prologue()
+    day_s = 120.0 if args.smoke else 600.0
     cfg = SimConfig(
         policy="variable+batching",
         params=CALIBRATED,
         process="diurnal",
         rate=20.0,                  # mean req/s; peak ~= 36/s, trough ~= 4/s
-        diurnal_period_s=600.0,     # one "day" every 10 minutes
-        duration=600.0,
+        diurnal_period_s=day_s,     # one compressed "day"
+        duration=day_s,
         seed=0,
         gpus_init=12,
         max_gpus=64,
-        metrics_interval_s=30.0,
+        metrics_interval_s=day_s / 20.0,
     )
     print(f"policy={cfg.policy}  process={cfg.process}  "
           f"mean_rate={cfg.rate}/s  duration={cfg.duration:.0f}s")
@@ -75,18 +111,22 @@ def main():
 def hetero_day(base_cfg: SimConfig):
     """Same diurnal day on the 2-class pool with EDF dispatch.
 
-    spot_ratio=0.7: at 0.5x the spot class is too slow for the tighter
-    deadlines, and because the autoscaler grows spot FIRST the fixed
-    base slice saturates at peak (deadline-tight jobs all queue there) —
-    the classic failure mode of blind spot-first scaling, visible here
-    by just lowering the ratio.
+    spot_ratio=0.5: at half the base rate, spot is too slow for the
+    tighter deadlines, so deadline-aware routing funnels those jobs to
+    the reserved base slice.  Blind spot-first scaling used to starve it
+    (spot still had headroom, so the autoscaler never grew base — the
+    docs/capacity.md caveat); the deadline-aware allocator now computes
+    per-class feasibility floors from the demand window, so the base
+    class grows past its initial count exactly when tight demand needs
+    it.
     """
     import dataclasses
     cap = table4_capacity(base_count=8, spot_count=8, base_max=32,
-                          spot_max=64, spot_ratio=0.7)
+                          spot_max=64, spot_ratio=0.5)
     cfg = dataclasses.replace(base_cfg, capacity=cap, dispatch="edf")
     res = run_fleet_sim(cfg)
-    print("\n== heterogeneous pool (base + 0.7x spot, EDF dispatch) ==")
+    print("\n== heterogeneous pool (base + 0.5x spot, EDF dispatch, "
+          "deadline-aware allocator) ==")
     print(f"requests: {len(res.completed)} completed, "
           f"{res.violations} SLA violations "
           f"({res.violations / max(1, len(res.completed)):.1%}); "
@@ -97,6 +137,11 @@ def hetero_day(base_cfg: SimConfig):
               f"released={st['released']:3d} util={st['utilization']:.2f} "
               f"gpu_s={st['gpu_seconds']:.1f} "
               f"cost={st['weighted_gpu_seconds']:.1f}")
+    base_init = cap["base"].count
+    grew = res.per_class["base"]["peak"] > base_init
+    print(f"base grew past its initial {base_init} GPUs: {grew} "
+          "(tight-deadline demand pinned reserved capacity; spot alone "
+          "cannot serve it)")
     print(f"total: {res.total_gpu_seconds:.1f} GPU-s = "
           f"{res.total_gpu_cost:.1f} cost units "
           f"(homogeneous run above pays 1.0/GPU-s; spot discount bought "

@@ -7,8 +7,14 @@
    the fp16 hidden boundary, device finishes; verifies the logits match
    the monolithic forward at every split point.
 
-    PYTHONPATH=src python examples/split_serving.py
+    PYTHONPATH=src python examples/split_serving.py [--smoke]
+
+Scheduling decisions come from the unified planner: the diffusion
+engine's ``assign``/``plan`` delegate to ``repro.api.Planner``, and the
+demo prints the decision's explain() trace for one device.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -28,18 +34,29 @@ from repro.serving.engine import (
 )
 
 
-def diffusion_demo():
+def diffusion_demo(smoke: bool = False):
     cfg = stable_diffusion_v1.reduced()
     params = diffusion.init_params(cfg, jax.random.PRNGKey(0))
     cost = CostParams(r_cloud=40.0, n_total=cfg.n_total_iterations,
                       n_step=cfg.split_stride, t_lim=3.0, k_decode=1.0)
     device = DiffusionDeviceSim(params, cfg)
     toks = np.zeros((1, cfg.text_len), np.int32)
-    req = Request("r", DeviceProfile("dev", 2.0, rtt=0.05), toks, toks)
+    prof = DeviceProfile("dev", 2.0, rtt=0.05)
+    req = Request("r", prof, toks, toks)
     n = cfg.split_stride * 2
+
+    # the engine's scheduling surface IS the unified planner: one
+    # request in, one explained decision out
+    probe = DiffusionSplitEngine(params, cfg, cost, link=LOCAL_LINK)
+    decision = probe.plan(prof)
+    print("== planner decision for this device (engine.plan) ==")
+    print(decision.explain())
+    assert decision.n_final == probe.assign(prof)
+
     print("== diffusion iteration split ==")
     base_img = None
-    for mode in ("paper", "int8"):
+    modes = ("paper",) if smoke else ("paper", "int8")
+    for mode in modes:
         eng = DiffusionSplitEngine(params, cfg, cost, link=LOCAL_LINK,
                                    transfer_mode=mode)
         res = eng.process_group([req], n, seed=0)[0]
@@ -49,6 +66,8 @@ def diffusion_demo():
         corr = np.corrcoef(img.ravel(), base_img.ravel())[0, 1]
         print(f"  mode={mode:6s} payload={len(res.payload):7d}B "
               f"corr_vs_paper={corr:.4f}")
+    if smoke:
+        return
     # lossy channel: drop 5% of packets of the latent, zero-fill
     eng = DiffusionSplitEngine(params, cfg, cost, link=LOCAL_LINK)
     res = eng.process_group([req], n, seed=0)[0]
@@ -62,7 +81,7 @@ def diffusion_demo():
           "(graceful degradation, paper §7)")
 
 
-def layer_split_demo():
+def layer_split_demo(smoke: bool = False):
     print("== LM layer split (qwen2-class) ==")
     cfg = reduced_config("qwen2-7b")
     params = tr.init_params(cfg, jax.random.PRNGKey(0))
@@ -73,7 +92,8 @@ def layer_split_demo():
     want = np.asarray(tr.unembed(params, hidden[:, -1:], cfg), np.float32)
     engine = LayerSplitEngine(params, cfg, link=LOCAL_LINK)
     device = LayerSplitDevice(params, cfg)
-    for g in range(0, cfg.num_groups() + 1, max(1, cfg.num_groups() // 4)):
+    stride = cfg.num_groups() if smoke else max(1, cfg.num_groups() // 4)
+    for g in range(0, cfg.num_groups() + 1, stride):
         payload, t_net = engine.process({"tokens": toks}, g)
         got = np.asarray(device.complete(payload, g), np.float32)
         err = np.max(np.abs(got - want))
@@ -83,5 +103,9 @@ def layer_split_demo():
 
 
 if __name__ == "__main__":
-    diffusion_demo()
-    layer_split_demo()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI run: one transfer mode, fewer splits")
+    args = ap.parse_args()
+    diffusion_demo(smoke=args.smoke)
+    layer_split_demo(smoke=args.smoke)

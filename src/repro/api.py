@@ -1,0 +1,87 @@
+"""repro.api — the one-stop facade for the paper's serving system.
+
+Everything a consumer needs to make (and audit) a split/batching/
+capacity decision, or to drive the serving surfaces built on top of it,
+imports from here:
+
+    from repro.api import (
+        CALIBRATED, DeviceProfile, PlanRequest, Planner,
+    )
+    planner = Planner(CALIBRATED, policy="variable+batching")
+    decision = planner.plan(PlanRequest(device=DeviceProfile("d", 2.25)))
+    print(decision.explain())           # which policy set each field
+    payload = decision.to_json()        # telemetry-ready
+    assert repro.api.replay(payload).to_json() == payload   # deterministic
+
+The facade is intentionally flat and import-cheap (no jax): the planner
+protocol (`core.planner`), the cost/capacity model behind it, and the
+simulation/serving entry points.  CI runs both examples end-to-end
+against this surface, so drift here breaks the build, not users.
+"""
+from repro.core.capacity import (  # noqa: F401
+    CloudCapacity,
+    GpuClass,
+    reference_params,
+)
+from repro.core.cost_model import (  # noqa: F401
+    BatchModel,
+    CostParams,
+    cloud_gpu_time,
+    e2e_latency,
+    fit_batch_model,
+    quantize_step,
+    solve_n_cloud,
+)
+from repro.core.planner import (  # noqa: F401
+    JobSpec,
+    NetworkProfile,
+    PlanDecision,
+    PlanRequest,
+    Planner,
+    POLICIES,
+    PoolSnapshot,
+    RoutePolicy,
+    make_scheduler,
+    plan,
+    replay,
+)
+from repro.core.scheduler import (  # noqa: F401
+    Assignment,
+    allocate_gpus,
+    allocate_gpus_heterogeneous,
+    cheapest_feasible_class,
+    deadline_floors,
+)
+from repro.core.telemetry import (  # noqa: F401
+    DeviceProfile,
+    generate_fleet,
+)
+from repro.serving.fleet_sim import (  # noqa: F401
+    FleetSimResult,
+    SimConfig,
+    run_fleet_sim,
+)
+from repro.serving.simulator import (  # noqa: F401
+    CALIBRATED,
+    fleet_sim_table4,
+    run_table4,
+    table4_capacity,
+    table4_fleet,
+)
+
+__all__ = [
+    # planner protocol
+    "JobSpec", "NetworkProfile", "PlanDecision", "PlanRequest", "Planner",
+    "PoolSnapshot", "RoutePolicy", "POLICIES", "make_scheduler", "plan",
+    "replay",
+    # cost / capacity model
+    "BatchModel", "CloudCapacity", "CostParams", "GpuClass", "Assignment",
+    "cloud_gpu_time", "e2e_latency", "fit_batch_model", "quantize_step",
+    "solve_n_cloud", "reference_params", "allocate_gpus",
+    "allocate_gpus_heterogeneous", "cheapest_feasible_class",
+    "deadline_floors",
+    # fleets + serving entry points
+    "DeviceProfile", "generate_fleet", "FleetSimResult", "SimConfig",
+    "run_fleet_sim", "CALIBRATED", "fleet_sim_table4", "run_table4",
+    "table4_capacity", "table4_fleet",
+]

@@ -5,6 +5,7 @@ from repro.core.capacity import (  # noqa: F401
     reference_params,
 )
 from repro.core.cost_model import (  # noqa: F401
+    BatchModel,
     CostParams,
     SegmentCost,
     batchable,
@@ -18,6 +19,17 @@ from repro.core.cost_model import (  # noqa: F401
     solve_n_cloud,
     solve_split_fraction,
 )
+from repro.core.planner import (  # noqa: F401
+    JobSpec,
+    NetworkProfile,
+    PlanDecision,
+    PlanRequest,
+    Planner,
+    PoolSnapshot,
+    RoutePolicy,
+    make_scheduler,
+    replay,
+)
 from repro.core.scheduler import (  # noqa: F401
     AllCloudScheduler,
     AllocationPlan,
@@ -30,6 +42,7 @@ from repro.core.scheduler import (  # noqa: F401
     allocate_gpus,
     allocate_gpus_heterogeneous,
     cheapest_feasible_class,
+    deadline_floors,
     summarize,
 )
 from repro.core.telemetry import (  # noqa: F401

@@ -18,8 +18,14 @@ when its tightest member would otherwise go stale.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
-from repro.core.cost_model import CostParams, c_batch_at, e2e_latency
+from repro.core.cost_model import (
+    BatchModel,
+    CostParams,
+    c_batch_at,
+    e2e_latency,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,11 +46,17 @@ class BatchingAdmission:
     """
 
     def __init__(self, params: CostParams, c_batch: float,
-                 batch_size: int = 2):
+                 batch_size: int = 2,
+                 batch_model: Optional[BatchModel] = None):
         self.p = params
         # c_batch is measured at batch 2; at other batch sizes use the
-        # §4.4 linear micro-model extrapolation
-        self.c_batch = c_batch_at(c_batch, batch_size)
+        # §4.4 linear micro-model extrapolation — unless a fitted
+        # BatchModel from real multi-point timings is given
+        self.batch_model = batch_model
+        if batch_model is not None:
+            self.c_batch = batch_model.c_batch(batch_size)
+        else:
+            self.c_batch = c_batch_at(c_batch, batch_size)
         self.batch_size = batch_size
         # batching must actually save accelerator time to be worth the
         # wait (same guard as the static scheduler): c_batch < batch_size

@@ -135,14 +135,26 @@ class CloudCapacity:
 
     # -- §4.5 per-class planning -------------------------------------------
     def plan_counts(self, needed_supply: float,
-                    current: Mapping[str, int]) -> Dict[str, int]:
+                    current: Mapping[str, int],
+                    floors: Optional[Mapping[str, int]] = None
+                    ) -> Dict[str, int]:
         """Per-class GPU targets meeting ``needed_supply`` its/s from
         ``current`` counts, growing spot-first / shrinking spot-first.
+
+        ``floors`` raises a class's effective minimum (deadline-aware
+        allocation: demand only that class can serve within its SLA must
+        be covered there, regardless of the spot-first greedy order —
+        see ``scheduler.deadline_floors``).  Growth still lands on spot
+        first; release never drops a class below its floor.
 
         Reduces exactly to the scalar plan for a homogeneous pool:
         target = clamp(ceil(needed_supply / r_cloud), min, max).
         """
-        targets = {c.name: min(max(current.get(c.name, 0), c.min_count),
+        floors = floors or {}
+        lo = {c.name: min(max(c.min_count, floors.get(c.name, 0)),
+                          c.max_count)
+              for c in self.classes}
+        targets = {c.name: min(max(current.get(c.name, 0), lo[c.name]),
                                c.max_count)
                    for c in self.classes}
         supply = self.supply(targets)
@@ -166,7 +178,7 @@ class CloudCapacity:
                 # keep (count - drop) * r >= needed share: drop whole GPUs
                 # only while the remaining supply still covers the need
                 drop = min(int(excess / c.r_cloud + 1e-9),
-                           targets[c.name] - c.min_count)
+                           targets[c.name] - lo[c.name])
                 drop = max(0, drop)
                 targets[c.name] -= drop
                 supply -= drop * c.r_cloud

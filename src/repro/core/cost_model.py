@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Sequence
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,6 +146,63 @@ def c_batch_of(batch_size: int, t_startup: float, t_task: float) -> float:
     """Slowdown of a batch launch vs. a single launch:
     c_batch(b) = t_batch(b) / t_batch(1)."""
     return (t_startup + t_task * batch_size) / (t_startup + t_task)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchModel:
+    """Calibrated §4.4 batching micro-model: t_batch = t_startup +
+    t_task * b, fitted from REAL multi-point batch timings
+    (``fit_batch_model``) instead of the single pinned batch-2
+    measurement that ``c_batch_at`` extrapolates from.
+
+    Consumers (``BatchingAdmission``, ``IntelligentBatchingScheduler``,
+    the planner) fall back to the ``c_batch_at`` extrapolation when no
+    model is given, so the calibrated path is strictly opt-in.
+    """
+    t_startup: float
+    t_task: float
+
+    def __post_init__(self):
+        # t_batch must be positive at b=1 and non-decreasing in b, else
+        # c_batch(b) < 1 (or negative) silently corrupts every GPU
+        # service time downstream
+        if self.t_startup + self.t_task <= 0:
+            raise ValueError("batch model must have t_startup + t_task > 0")
+        if self.t_task < 0:
+            raise ValueError(
+                f"fitted t_task = {self.t_task:.6g} < 0: measured batch "
+                "times DECREASE with batch size — timings are too noisy "
+                "or mislabeled to calibrate c_batch from")
+
+    @classmethod
+    def fit(cls, batch_sizes: Sequence[int],
+            times: Sequence[float]) -> "BatchModel":
+        """Least-squares fit from measured (batch_size, seconds) points."""
+        if len(batch_sizes) != len(times) or len(batch_sizes) < 2:
+            raise ValueError("need >= 2 (batch_size, time) measurements")
+        if len(set(batch_sizes)) < 2:
+            raise ValueError(
+                f"all measurements are at batch size {batch_sizes[0]}: "
+                "need >= 2 DISTINCT batch sizes to fit a slope")
+        return cls(*fit_batch_model(list(batch_sizes), list(times)))
+
+    @classmethod
+    def from_timings(cls, timings) -> "BatchModel":
+        """Build from an iterable of (batch_size, seconds) pairs — the
+        ``JobSpec.batch_timings`` / ``SimConfig.batch_timings`` format."""
+        pairs = [(int(b), float(t)) for b, t in timings]
+        return cls.fit([b for b, _ in pairs], [t for _, t in pairs])
+
+    def c_batch(self, batch_size: int) -> float:
+        """Fitted slowdown of a batch-b launch vs. a solo launch."""
+        if batch_size <= 1:
+            return 1.0
+        return c_batch_of(batch_size, self.t_startup, self.t_task)
+
+    @property
+    def c_batch_2(self) -> float:
+        """The batch-2 slowdown (the paper's single measured constant)."""
+        return self.c_batch(2)
 
 
 def c_batch_at(c_batch_2: float, batch_size: int) -> float:

@@ -1,0 +1,618 @@
+"""Unified Planner API: one request/decision protocol for every split,
+batching, and capacity decision.
+
+The paper's core contribution (§5) is a scheduler that "collects
+information about network quality, client device capability, and job
+requirements" and makes ONE decision per request.  Pre-refactor, that
+decision was assembled ad hoc by every consumer from scattered pieces
+(``cost_model.solve_n_cloud``, ``scheduler.assign_one`` /
+``cheapest_feasible_class``, ``admission.BatchingAdmission``,
+``capacity.CloudCapacity``, ``sla``).  This module is the single seam:
+
+    PlanRequest  (DeviceProfile + NetworkProfile + job context)
+        -> Planner.plan(): a composable policy pipeline
+           split solve -> quantize -> class routing -> batching
+           admission -> SLA adaptation
+        -> PlanDecision (JSON-serializable, with an explain() trace
+           naming the policy that set each field, and deterministic
+           replay from the serialized form)
+
+Design contract (the golden-trace anchor): the pipeline DELEGATES to
+the exact scheduler / admission / routing objects the pre-planner code
+paths used, so a migrated consumer produces bit-identical numbers.  The
+legacy free functions remain as thin delegates around this module.
+
+JointDNN and LinguaLinked both converge on this shape — a profile-in /
+plan-out interface is what lets offloading policies be swapped and
+compared cleanly; it is also the seam the ROADMAP's multi-pod serving
+and spot-preemption items plug into.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+from repro.core.admission import BatchingAdmission
+from repro.core.capacity import CloudCapacity, GpuClass
+from repro.core.cost_model import (
+    BatchModel,
+    CostParams,
+    c_batch_at,
+    cloud_gpu_time,
+    e2e_latency,
+)
+from repro.core.scheduler import (
+    AllCloudScheduler,
+    Assignment,
+    ConstantIterationScheduler,
+    IntelligentBatchingScheduler,
+    SchedulerBase,
+    VariableIterationScheduler,
+    cheapest_feasible_class,
+)
+from repro.core.telemetry import DeviceProfile
+
+#: The four Table-4 policies, in paper order (canonical definition;
+#: ``serving.simulator.POLICIES`` re-exports it).
+POLICIES = ("all_cloud", "constant", "variable", "variable+batching")
+
+#: iPhone 12 mini (paper §5.4) — the default worst device the constant
+#: policy sizes for.
+SLOWEST_DEVICE = 1.44
+
+DISPATCH_MODES = ("fifo", "edf")
+
+
+def make_scheduler(name: str, params: CostParams,
+                   worst_r_dev: float = SLOWEST_DEVICE,
+                   worst_rtt: float = 0.3, batch_size: int = 2,
+                   batch_model: Optional[BatchModel] = None,
+                   solve_c_batch: float = 1.0) -> SchedulerBase:
+    """Single factory for the Table-4 policies — every surface (the
+    planner, the static snapshot path, the event-driven fleet simulator)
+    builds its per-request assignment logic here, so they can never
+    drift apart.  ``solve_c_batch`` applies to the "variable" policy
+    only: the slowdown its solve assumes (see
+    ``VariableIterationScheduler``)."""
+    if name == "all_cloud":
+        return AllCloudScheduler(params)
+    if name == "constant":
+        return ConstantIterationScheduler(params, worst_r_dev=worst_r_dev,
+                                          worst_rtt=worst_rtt)
+    if name == "variable":
+        return VariableIterationScheduler(params,
+                                          solve_c_batch=solve_c_batch)
+    if name == "variable+batching":
+        return IntelligentBatchingScheduler(params, c_batch=params.c_batch,
+                                            batch_size=batch_size,
+                                            batch_model=batch_model)
+    raise ValueError(f"unknown policy {name!r}; expected one of {POLICIES}")
+
+
+# --------------------------------------------------------------------------
+# Request side: device + network + job requirements
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class NetworkProfile:
+    """Measured network quality for one request (overrides whatever the
+    device profile last reported)."""
+    rtt: float                    # round trip, seconds
+    bandwidth: float = 12.5e6     # bytes/s
+
+    @classmethod
+    def from_link(cls, link) -> "NetworkProfile":
+        """Adapt a ``core.transport.LinkProfile`` (duck-typed: anything
+        with .rtt and .bandwidth)."""
+        return cls(rtt=link.rtt, bandwidth=link.bandwidth)
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """Job requirements: what the service needs, independent of which
+    cloud runs it (r_cloud comes from the capacity at plan time)."""
+    n_total: int = 50             # iterations for full quality
+    n_step: int = 5               # quantization step (batchable groups)
+    t_lim: float = 8.5            # SLA: max end-to-end latency, seconds
+    k_decode: float = 2.0         # decode cost scale (paper §4.3)
+    c_batch: float = 1.6          # batch-2 slowdown measurement (§4.4)
+    policy: str = "variable+batching"
+    batch_size: int = 2
+    #: real multi-point batch timings ((batch_size, seconds), ...); when
+    #: given, ``fit_batch_model`` calibrates the batching slope instead
+    #: of the single pinned ``c_batch_at`` extrapolation
+    batch_timings: Optional[Tuple[Tuple[int, float], ...]] = None
+
+    def cost_params(self, r_cloud: float) -> CostParams:
+        return CostParams(r_cloud=r_cloud, n_total=self.n_total,
+                          n_step=self.n_step, t_lim=self.t_lim,
+                          k_decode=self.k_decode, c_batch=self.c_batch)
+
+    @classmethod
+    def from_params(cls, p: CostParams, policy: str = "variable+batching",
+                    batch_size: int = 2,
+                    batch_timings=None) -> "JobSpec":
+        return cls(n_total=p.n_total, n_step=p.n_step, t_lim=p.t_lim,
+                   k_decode=p.k_decode, c_batch=p.c_batch, policy=policy,
+                   batch_size=batch_size,
+                   batch_timings=tuple(tuple(x) for x in batch_timings)
+                   if batch_timings else None)
+
+    def batch_model(self) -> Optional[BatchModel]:
+        if not self.batch_timings:
+            return None
+        return BatchModel.from_timings(self.batch_timings)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRequest:
+    """One request in: who is asking (device), over what network, and
+    how backed up the cloud currently looks (the §4.4 online admission
+    honesty term)."""
+    device: DeviceProfile
+    network: Optional[NetworkProfile] = None
+    queue_delay_hint: float = 0.0
+    request_id: str = ""
+
+    def profile(self) -> DeviceProfile:
+        """The merged device view the solver sees: live network
+        measurements override the profile's last-reported ones."""
+        if self.network is None:
+            return self.device
+        return dataclasses.replace(self.device, rtt=self.network.rtt,
+                                   bandwidth=self.network.bandwidth)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "device": dataclasses.asdict(self.device),
+            "network": dataclasses.asdict(self.network)
+            if self.network else None,
+            "queue_delay_hint": self.queue_delay_hint,
+            "request_id": self.request_id,
+        }
+
+    @classmethod
+    def from_json(cls, d: Mapping[str, Any]) -> "PlanRequest":
+        return cls(
+            device=DeviceProfile(**d["device"]),
+            network=NetworkProfile(**d["network"]) if d.get("network")
+            else None,
+            queue_delay_hint=d.get("queue_delay_hint", 0.0),
+            request_id=d.get("request_id", ""),
+        )
+
+
+# --------------------------------------------------------------------------
+# Decision side
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class PlanDecision:
+    """One decision out: everything every consumer needs, plus the
+    trace of which policy set each field, plus the planner + request
+    context needed to replay the decision deterministically from its
+    serialized form (telemetry)."""
+    request: Dict[str, Any]       # serialized PlanRequest
+    planner: Dict[str, Any]       # serialized planner config (replay)
+    n_exact: float                # real-valued split solve
+    n_final: int                  # after step quantization
+    latency: float                # predicted e2e at the reference rate
+    feasible: bool                # latency <= t_lim
+    gpu_time: float               # predicted cloud GPU-seconds (solo)
+    gpu_class: Optional[str]      # advisory cheapest feasible class
+    cloud_rate: float             # r_cloud of that class (ref if None)
+    batch_admit: bool             # §4.4: may wait in a batching window
+    batch_max_wait: float
+    batch_latency: float          # predicted no-wait latency, batched rate
+    batch_solo_latency: float
+    batch_reason: str
+    t_lim: float                  # effective SLA this was decided under
+    trace: List[Dict[str, Any]]   # [{"field", "value", "policy", "detail"}]
+
+    #: the live Assignment the scheduler produced (not serialized; the
+    #: fleet simulator keeps it so the migration is object-identical)
+    _assignment: Optional[Assignment] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def assignment(self) -> Assignment:
+        """Legacy bridge: the ``scheduler.Assignment`` view of this
+        decision (the object the scheduler produced when planned live,
+        reconstructed bit-exactly after deserialization)."""
+        if self._assignment is not None:
+            return self._assignment
+        if not self.request:
+            raise ValueError(
+                "decision carries no request payload (planned with "
+                "audit=False): reconstruct from the live Assignment or "
+                "re-plan with an audited Planner")
+        req = PlanRequest.from_json(self.request)
+        prof = req.profile()
+        return Assignment(
+            device_id=prof.device_id, r_dev=prof.r_dev,
+            t_network=prof.rtt, n_exact=self.n_exact,
+            n_final=self.n_final, latency=self.latency,
+            feasible=self.feasible)
+
+    def to_json(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        del d["_assignment"]
+        return d
+
+    @classmethod
+    def from_json(cls, d: Mapping[str, Any]) -> "PlanDecision":
+        return cls(**{k: v for k, v in d.items() if k != "_assignment"})
+
+    def replay(self) -> "PlanDecision":
+        """Rebuild the planner from the embedded config and re-plan the
+        embedded request.  Deterministic: ``replayed.to_json() ==
+        self.to_json()`` (tested)."""
+        if not self.planner or not self.request:
+            raise ValueError(
+                "decision carries no replay payload (planned with "
+                "audit=False — audit payloads are skipped in hot-loop "
+                "mode); plan with an audited Planner to replay")
+        return Planner.from_config(self.planner).plan(
+            PlanRequest.from_json(self.request))
+
+    def explain(self) -> str:
+        """Human-readable trace: which policy set each field and why."""
+        lines = []
+        for e in self.trace:
+            val = e["value"]
+            val = f"{val:.6g}" if isinstance(val, float) else repr(val)
+            line = f"{e['field']:>18s} = {val:<14s} <- {e['policy']}"
+            if e.get("detail"):
+                line += f"  ({e['detail']})"
+            lines.append(line)
+        return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# Queue-aware class routing (the dispatch-time policy)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PoolSnapshot:
+    """What routing needs to know about one class's pool right now."""
+    free: bool                    # busy < capacity (a GPU is idle)
+    queue_delay: float            # estimated wait for a newly queued job
+    routable: bool                # capacity + pending > 0
+
+
+class RoutePolicy:
+    """Class-routing rule shared by the planner and the fleet
+    simulator's ``HeterogeneousDispatcher`` (which delegates here
+    instead of inlining the loop).
+
+    ``deadline_aware=True`` ("edf" dispatch): a job goes to the CHEAPEST
+    class whose estimated finish (queue estimate + per-class service
+    time) still meets its cloud deadline; when none is feasible, to the
+    class finishing soonest.  ``deadline_aware=False`` ("fifo"): first
+    class (cheapest order) with a free GPU, else soonest-finish — the
+    deadline-blind baseline.
+
+    This is the queue-state-aware sibling of the pure model-level
+    ``scheduler.cheapest_feasible_class`` (which the planner's advisory
+    routing stage uses); both walk ``capacity.cheapest_first()``.
+    """
+
+    def __init__(self, capacity: CloudCapacity, params: CostParams,
+                 deadline_aware: bool = False):
+        self.capacity = capacity
+        self.p = params
+        self.deadline_aware = deadline_aware
+        self.order = capacity.cheapest_first()
+        self.name = ("route:edf-cheapest-feasible" if deadline_aware
+                     else "route:first-free")
+
+    def service_on(self, cls: GpuClass, n_final: int,
+                   batch_factor: float) -> float:
+        """Wall seconds one job holds a GPU of ``cls``."""
+        return cloud_gpu_time(n_final, self.p, batch_factor,
+                              r_cloud=cls.r_cloud)
+
+    def choose(self, now: float, n_final: int, batch_factor: float,
+               deadline: float,
+               pools: Mapping[str, PoolSnapshot]) -> GpuClass:
+        """Pick the executing class given live per-class queue state.
+
+        Classes with no capacity and none pending are never routable — a
+        job queued there would strand forever (jobs stay in their routed
+        class's queue, and the spot-first autoscaler may never grow that
+        class).
+        """
+        best, best_finish = None, math.inf
+        for cls in self.order:
+            snap = pools[cls.name]
+            if not snap.routable:
+                continue
+            service = self.service_on(cls, n_final, batch_factor)
+            start = now if snap.free else now + snap.queue_delay
+            finish = start + service
+            if self.deadline_aware:
+                if finish <= deadline + 1e-9:
+                    return cls
+            elif snap.free:
+                return cls
+            if finish < best_finish:
+                best, best_finish = cls, finish
+        if best is not None:
+            return best
+        # every pool is empty with nothing pending (possible at t=0 with
+        # autoscale on): queue where the spot-first autoscaler will grow
+        # capacity first
+        for cls in self.capacity.scale_order():
+            if cls.max_count > 0:
+                return cls
+        return self.order[0]
+
+
+# --------------------------------------------------------------------------
+# The planner
+# --------------------------------------------------------------------------
+def _t(field: str, value, policy: str, detail: str = "") -> Dict[str, Any]:
+    return {"field": field, "value": value, "policy": policy,
+            "detail": detail}
+
+
+class Planner:
+    """The one decision-maker: PlanRequest in, PlanDecision out.
+
+    The pipeline stages and the policy objects behind them:
+
+    1. split solve      — ``make_scheduler(policy).assign_one`` (the
+                          Table-4 per-request solvers)
+    2. quantize         — the same assignment's n_step rounding
+    3. class routing    — ``cheapest_feasible_class`` over the capacity
+                          (advisory; the queue-aware ``route_policy`` is
+                          what a dispatcher consults at submit time)
+    4. batching         — ``admission.BatchingAdmission`` (§4.4 online)
+    5. SLA adaptation   — the effective t_lim (``set_t_lim`` is the
+                          hook the §7 adaptive controller drives)
+
+    The scheduler and admission objects are owned by the planner and
+    shared with any consumer that needs them live (the fleet simulator),
+    so there is exactly one source of truth per decision.
+
+    ``audit`` (default True) controls whether plan() materializes the
+    audit payloads — the per-field trace and the embedded request +
+    planner config that make a decision explainable and replayable.
+    ``audit=False`` is for embedded hot loops (the fleet simulator makes
+    thousands of decisions per run and discards everything but three
+    scalars): the SAME pipeline runs and every decision VALUE is
+    identical, but trace/request/planner come back empty, so such
+    decisions are not replayable and skip the advisory class route.
+    """
+
+    def __init__(self, params: Optional[CostParams] = None, *,
+                 job: Optional[JobSpec] = None,
+                 capacity: Optional[CloudCapacity] = None,
+                 policy: Optional[str] = None,
+                 batch_size: Optional[int] = None,
+                 batch_model: Optional[BatchModel] = None,
+                 worst_r_dev: float = SLOWEST_DEVICE,
+                 worst_rtt: float = 0.3,
+                 dispatch: str = "fifo",
+                 solve_c_batch: float = 1.0,
+                 audit: bool = True,
+                 sla_source: str = "fixed"):
+        if params is None:
+            if job is None:
+                raise ValueError("need params or a JobSpec")
+            if capacity is None:
+                raise ValueError("JobSpec carries no r_cloud: pass the "
+                                 "capacity that will run the job")
+            params = job.cost_params(capacity.reference_rate())
+        if job is None:
+            job = JobSpec.from_params(
+                params, policy=policy or "variable+batching",
+                batch_size=batch_size or 2)
+        self.job = job
+        self.policy = policy if policy is not None else job.policy
+        self.batch_size = batch_size if batch_size is not None \
+            else job.batch_size
+        if dispatch not in DISPATCH_MODES:
+            raise ValueError(f"unknown dispatch {dispatch!r}; "
+                             f"expected one of {DISPATCH_MODES}")
+        self.dispatch = dispatch
+        self.capacity = capacity
+        self.worst_r_dev = worst_r_dev
+        self.worst_rtt = worst_rtt
+        self.batch_model = batch_model if batch_model is not None \
+            else job.batch_model()
+        self.p = params
+        self.solve_c_batch = solve_c_batch
+        self.audit = audit
+        self._sla_source = sla_source
+        self.scheduler = make_scheduler(
+            self.policy, params, worst_r_dev=worst_r_dev,
+            worst_rtt=worst_rtt, batch_size=self.batch_size,
+            batch_model=self.batch_model, solve_c_batch=solve_c_batch)
+        self.admission: Optional[BatchingAdmission] = (
+            self.scheduler.admission()
+            if self.scheduler.supports_batching and self.batch_size > 1
+            else None)
+        # batch-2 slowdown measurement (single source of truth with the
+        # scheduler/admission pair)
+        self._c_batch_2 = getattr(self.scheduler, "c_batch_measured",
+                                  params.c_batch)
+        self.route_policy: Optional[RoutePolicy] = (
+            RoutePolicy(capacity, params,
+                        deadline_aware=dispatch == "edf")
+            if capacity is not None else None)
+        # plan() embeds the config in every decision; it only changes
+        # on set_t_lim, so cache the dict (treated as read-only by
+        # decisions; to_json() deep-copies it for the wire)
+        self._config_cache: Optional[Dict[str, Any]] = None
+
+    # -- construction helpers ----------------------------------------------
+    @classmethod
+    def from_params(cls, params: CostParams, **kw) -> "Planner":
+        return cls(params, **kw)
+
+    @classmethod
+    def from_config(cls, d: Mapping[str, Any]) -> "Planner":
+        """Rebuild a planner from ``config_json()`` output (replay)."""
+        return cls(
+            CostParams(**d["params"]),
+            capacity=CloudCapacity.from_json(d["capacity"])
+            if d.get("capacity") else None,
+            policy=d["policy"], batch_size=d["batch_size"],
+            batch_model=BatchModel(**d["batch_model"])
+            if d.get("batch_model") else None,
+            worst_r_dev=d.get("worst_r_dev", SLOWEST_DEVICE),
+            worst_rtt=d.get("worst_rtt", 0.3),
+            dispatch=d.get("dispatch", "fifo"),
+            solve_c_batch=d.get("solve_c_batch", 1.0),
+            sla_source=d.get("sla_source", "fixed"))
+
+    def config_json(self) -> Dict[str, Any]:
+        """Everything needed to rebuild this planner deterministically
+        (embedded in every PlanDecision for replay; cached — the config
+        only changes on set_t_lim)."""
+        if self._config_cache is not None:
+            return self._config_cache
+        self._config_cache = {
+            "params": dataclasses.asdict(self.p),
+            "policy": self.policy,
+            "batch_size": self.batch_size,
+            "batch_model": dataclasses.asdict(self.batch_model)
+            if self.batch_model else None,
+            "worst_r_dev": self.worst_r_dev,
+            "worst_rtt": self.worst_rtt,
+            "dispatch": self.dispatch,
+            "solve_c_batch": self.solve_c_batch,
+            "capacity": self.capacity.to_json() if self.capacity else None,
+            "sla_source": self._sla_source,
+        }
+        return self._config_cache
+
+    # -- SLA adaptation hook (§7) ------------------------------------------
+    def set_t_lim(self, t_lim: float, source: str = "adaptive") -> None:
+        """Apply a new SLA target to FUTURE decisions: the per-request
+        solver and the batching admission both see it (in-flight
+        deadlines are contracts and are not touched — core.sla)."""
+        if t_lim == self.p.t_lim:
+            return
+        self.p = dataclasses.replace(self.p, t_lim=t_lim)
+        self.scheduler.p = self.p
+        if self.admission is not None:
+            self.admission.p = self.p
+        self._sla_source = source
+        self._config_cache = None
+
+    # -- batching constants -------------------------------------------------
+    def c_batch_of(self, batch_size: int) -> float:
+        """Slowdown of a batch-b cloud launch: the fitted BatchModel when
+        calibrated timings were given, else the §4.4 linear
+        extrapolation from the pinned batch-2 measurement."""
+        if self.batch_model is not None:
+            return self.batch_model.c_batch(batch_size)
+        return c_batch_at(self._c_batch_2, batch_size)
+
+    # -- the pipeline -------------------------------------------------------
+    def plan(self, request: PlanRequest) -> PlanDecision:
+        """Run the policy pipeline for one request."""
+        prof = request.profile()
+        p = self.p
+        audit = self.audit
+        trace: List[Dict[str, Any]] = []
+
+        # 1+2. split solve + quantize (the Table-4 per-request policy)
+        a = self.scheduler.assign_one(prof)
+        if audit:
+            trace.append(_t("n_exact", a.n_exact,
+                            f"split:{self.scheduler.name}",
+                            f"solve over r_dev={prof.r_dev:.4g}, "
+                            f"rtt={prof.rtt:.4g}, t_lim={p.t_lim:.4g}"))
+            trace.append(_t("n_final", a.n_final,
+                            f"quantize:n_step={p.n_step}",
+                            "round up to the step grid "
+                            "(batchable groups)"))
+            trace.append(_t("latency", a.latency, "model:e2e_latency",
+                            f"solo prediction at reference rate "
+                            f"r_cloud={p.r_cloud:.4g}"))
+            trace.append(_t("feasible", a.feasible, "model:e2e_latency",
+                            f"latency <= t_lim={p.t_lim:.4g}"))
+
+        # 3. class routing (advisory: queue-blind cheapest feasible —
+        # skipped in non-audit mode, where routing happens at dispatch)
+        gpu_class: Optional[str] = None
+        cloud_rate = p.r_cloud
+        if audit and a.n_final > 0 and self.capacity is not None:
+            cls = cheapest_feasible_class(a.n_final, prof.r_dev, prof.rtt,
+                                          p, self.capacity)
+            gpu_class, cloud_rate = cls.name, cls.r_cloud
+            trace.append(_t("gpu_class", gpu_class,
+                            "route:cheapest_feasible_class",
+                            "advisory; dispatch-time routing adds live "
+                            "queue state (route_policy)"))
+        elif audit:
+            trace.append(_t("gpu_class", gpu_class,
+                            "route:none" if a.n_final <= 0
+                            else "route:reference",
+                            "local-only request" if a.n_final <= 0
+                            else "no capacity model attached"))
+        gpu_time = cloud_gpu_time(a.n_final, p) if a.n_final > 0 else 0.0
+        if audit:
+            trace.append(_t("gpu_time", gpu_time, "model:cloud_gpu_time",
+                            "solo GPU-seconds at the reference rate"))
+
+        # 4. batching admission (§4.4, online form; a local-only request
+        # has nothing to batch — only the audit trace wants the verdict)
+        if self.admission is not None and (a.n_final > 0 or audit):
+            dec = self.admission.decide(
+                a.n_final, prof.r_dev, prof.rtt,
+                queue_delay_hint=request.queue_delay_hint)
+            admit, max_wait = dec.admit, dec.max_wait
+            batch_lat, solo_lat = dec.batched_latency, dec.solo_latency
+            reason = dec.reason
+            if audit:
+                trace.append(_t("batch_admit", admit,
+                                "batching:§4.4-online", reason))
+        else:
+            admit, max_wait = False, 0.0
+            batch_lat, solo_lat = a.latency, a.latency
+            reason = (f"policy {self.policy!r} does not batch"
+                      if self.admission is None
+                      else "local-only request; nothing to batch")
+            if audit:
+                trace.append(_t("batch_admit", False, "batching:none",
+                                reason))
+
+        # 5. SLA adaptation: record the target this decision ran under
+        if audit:
+            trace.append(_t("t_lim", p.t_lim, f"sla:{self._sla_source}",
+                            "set_t_lim() is the §7 adaptive controller "
+                            "hook"))
+
+        return PlanDecision(
+            request=request.to_json() if audit else {},
+            planner=self.config_json() if audit else {},
+            n_exact=a.n_exact, n_final=a.n_final, latency=a.latency,
+            feasible=a.feasible, gpu_time=gpu_time, gpu_class=gpu_class,
+            cloud_rate=cloud_rate, batch_admit=admit,
+            batch_max_wait=max_wait, batch_latency=batch_lat,
+            batch_solo_latency=solo_lat, batch_reason=reason,
+            t_lim=p.t_lim, trace=trace, _assignment=a)
+
+
+# --------------------------------------------------------------------------
+# Facade conveniences
+# --------------------------------------------------------------------------
+def plan(device: DeviceProfile, params: CostParams,
+         policy: str = "variable+batching",
+         capacity: Optional[CloudCapacity] = None,
+         network: Optional[NetworkProfile] = None, **kw) -> PlanDecision:
+    """One-shot: build a Planner and plan a single request."""
+    planner = Planner(params, policy=policy, capacity=capacity, **kw)
+    return planner.plan(PlanRequest(device=device, network=network))
+
+
+def replay(decision) -> PlanDecision:
+    """Replay a serialized decision (dict, JSON string, or PlanDecision)
+    deterministically from its embedded planner config + request."""
+    if isinstance(decision, str):
+        decision = json.loads(decision)
+    if isinstance(decision, Mapping):
+        decision = PlanDecision.from_json(decision)
+    return decision.replay()

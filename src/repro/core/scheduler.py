@@ -20,6 +20,7 @@ import math
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.cost_model import (
+    BatchModel,
     CostParams,
     batchable,
     c_batch_at,
@@ -127,10 +128,19 @@ class ConstantIterationScheduler(SchedulerBase):
 
 
 class VariableIterationScheduler(SchedulerBase):
+    """``solve_c_batch`` is the cloud slowdown the per-request solve
+    assumes: 1.0 (default) sizes for a solo run — the Table-4 policy;
+    an engine that always executes groups batched passes its measured
+    c_batch to size conservatively for the batched rate."""
     name = "variable"
 
+    def __init__(self, params: CostParams, solve_c_batch: float = 1.0):
+        super().__init__(params)
+        self.solve_c_batch = solve_c_batch
+
     def assign_one(self, prof: DeviceProfile) -> Assignment:
-        n = solve_n_cloud(prof.r_dev, self.p, prof.rtt, c_batch=1.0)
+        n = solve_n_cloud(prof.r_dev, self.p, prof.rtt,
+                          c_batch=self.solve_c_batch)
         nf = quantize_step(n, self.p.n_step, self.p.n_total)
         return _mk_assignment(prof, n, nf, self.p)
 
@@ -150,12 +160,20 @@ class IntelligentBatchingScheduler(VariableIterationScheduler):
     supports_batching = True
 
     def __init__(self, params: CostParams, c_batch: float,
-                 batch_size: int = 2):
+                 batch_size: int = 2,
+                 batch_model: Optional[BatchModel] = None):
         super().__init__(params)
         # c_batch is measured at batch 2 (paper §5.5); other batch sizes
-        # extrapolate through the §4.4 linear micro-model
-        self.c_batch_measured = c_batch
-        self.c_batch = c_batch_at(c_batch, batch_size)
+        # extrapolate through the §4.4 linear micro-model — unless a
+        # calibrated BatchModel (fit from real multi-point timings) is
+        # given, in which case its fitted slope replaces both
+        self.batch_model = batch_model
+        if batch_model is not None:
+            self.c_batch_measured = batch_model.c_batch_2
+            self.c_batch = batch_model.c_batch(batch_size)
+        else:
+            self.c_batch_measured = c_batch
+            self.c_batch = c_batch_at(c_batch, batch_size)
         self.batch_size = batch_size
 
     def admission(self):
@@ -163,9 +181,10 @@ class IntelligentBatchingScheduler(VariableIterationScheduler):
         constants (used by the fleet simulator's batching windows)."""
         from repro.core.admission import BatchingAdmission
         # pass the raw batch-2 measurement: BatchingAdmission applies the
-        # same c_batch_at extrapolation itself
+        # same c_batch_at extrapolation (or the shared BatchModel) itself
         return BatchingAdmission(self.p, self.c_batch_measured,
-                                 self.batch_size)
+                                 self.batch_size,
+                                 batch_model=self.batch_model)
 
     def schedule(self, fleet: Sequence[DeviceProfile]) -> List[Assignment]:
         asg = super().schedule(fleet)
@@ -283,21 +302,91 @@ class HeteroAllocationPlan:
     targets: Dict[str, int]         # class name -> target GPU count
     reference: AllocationPlan       # scalar plan at the reference rate
     needed_supply: float            # iterations/s the targets must cover
+    floors: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def release_gpus(self) -> bool:
         return self.reference.release_gpus
 
 
+def deadline_floors(demands, p: CostParams, capacity, horizon_s: float,
+                    headroom: float = 1.0,
+                    c_batch: float = 1.0) -> Dict[str, int]:
+    """Deadline-aware per-class GPU floors (the docs/capacity.md caveat
+    fix): demand that only fast classes can serve within ``p.t_lim``
+    must be covered by those classes, so blind spot-first scaling cannot
+    starve the reserved class when spot is too slow for tight deadlines.
+
+    ``demands`` is an iterable of ``(n_final, r_dev, t_network)`` — the
+    same sliding-horizon window the §4.5 re-plan aggregates.
+    ``c_batch`` is the slowdown jobs actually run at (pass the batch-b
+    slowdown when the policy batches: a batched job holds a slow class
+    even longer, which is precisely what saturates the reserved slice).
+
+    Each demand is charged to the SLOWEST class whose no-queue latency
+    still meets the SLA (the cheapest-feasible dispatch boundary;
+    nothing feasible falls back to the fastest class, mirroring
+    ``cheapest_feasible_class``).  Walking classes fastest-first, each
+    class's floor covers the cumulative demand that cannot flow to
+    anything slower, net of the supply already pledged by faster
+    classes.  Demand the SLOWEST class can serve is unconstrained — it
+    imposes no floor (aggregate supply is the §4.5 reference plan's
+    job), so for a homogeneous capacity every floor is zero and the
+    plan is EXACTLY the legacy scalar plan — the golden-trace anchor.
+    """
+    classes = sorted(capacity, key=lambda c: (-c.r_cloud, c.name))
+    floors: Dict[str, int] = {c.name: 0 for c in classes}
+    if len(classes) < 2:
+        return floors
+    # its/s of demand whose feasibility boundary is class i (can run on
+    # i or anything faster, but nothing slower)
+    need_rate = [0.0] * len(classes)
+    for n_final, r_dev, t_network in demands:
+        if n_final <= 0:
+            continue
+        idx = 0                          # infeasible-everywhere: fastest
+        for i in range(len(classes) - 1, -1, -1):
+            lat = e2e_latency(n_final, r_dev, p, t_network,
+                              c_batch=c_batch,
+                              r_cloud=classes[i].r_cloud)
+            if lat <= p.t_lim + 1e-9:
+                idx = i
+                break
+        need_rate[idx] += n_final / horizon_s * headroom
+    need = 0.0
+    pledged = 0.0
+    for i, c in enumerate(classes[:-1]):     # slowest class: no floor
+        need += need_rate[i]
+        gap = need - pledged
+        floor = min(c.max_count, int(math.ceil(gap / c.r_cloud - 1e-9))) \
+            if gap > 1e-12 else 0
+        floors[c.name] = max(0, floor)
+        pledged += floors[c.name] * c.r_cloud
+        # demand a max_count-clamped class cannot cover must NOT spill
+        # onto slower classes: they cannot meet its SLA, so pinning
+        # them raises cost without reducing violations (the residual is
+        # best-effort, handled by dispatch's fastest-class fallback)
+        need = min(need, pledged)
+    return floors
+
+
 def allocate_gpus_heterogeneous(summary: ScheduleSummary, p: CostParams,
                                 capacity, current: Dict[str, int],
                                 horizon_s: float, headroom: float = 1.0,
-                                release_threshold: float = 0.5
+                                release_threshold: float = 0.5,
+                                demands=None,
+                                demand_c_batch: float = 1.0
                                 ) -> HeteroAllocationPlan:
     """Class-aware §4.5 allocation: size the pool at the reference rate,
     then meet that supply with per-class counts via
     ``CloudCapacity.plan_counts`` (spot scales first, spot releases
     first).
+
+    ``demands`` (optional ``(n_final, r_dev, t_network)`` tuples — the
+    demand window behind ``summary.group_workloads``) enables the
+    deadline-aware floors: per-class feasibility is considered BEFORE
+    choosing which class to scale, so tight-deadline demand pins
+    reserved capacity even while spot still has headroom.
 
     For a homogeneous capacity this reduces EXACTLY to the scalar path:
     target = clamp(ceil(gpus_needed * headroom), min, max).
@@ -310,6 +399,9 @@ def allocate_gpus_heterogeneous(summary: ScheduleSummary, p: CostParams,
                              release_threshold=release_threshold)
     want_ref = math.ceil(ref_plan.gpus_needed * headroom)
     needed_supply = want_ref * r_ref
-    targets = capacity.plan_counts(needed_supply, current)
+    floors = (deadline_floors(demands, p, capacity, horizon_s,
+                              headroom=headroom, c_batch=demand_c_batch)
+              if demands is not None else {})
+    targets = capacity.plan_counts(needed_supply, current, floors=floors)
     return HeteroAllocationPlan(targets=targets, reference=ref_plan,
-                                needed_supply=needed_supply)
+                                needed_supply=needed_supply, floors=floors)

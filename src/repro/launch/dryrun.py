@@ -303,6 +303,35 @@ def analyze_cell(arch: str, cell_name: str, mesh, multi_pod: bool,
     return rec
 
 
+def parse_batch_times(spec: str):
+    """Parse ``--batch-times "1:0.016,2:0.0256,4:0.051"`` into
+    ((batch_size, seconds), ...) pairs for ``BatchModel.from_timings``."""
+    pairs = []
+    for item in spec.split(","):
+        b, _, t = item.partition(":")
+        pairs.append((int(b), float(t)))
+    if len(pairs) < 2:
+        raise ValueError("--batch-times needs >= 2 points, e.g. "
+                         "'1:0.016,2:0.0256'")
+    return tuple(pairs)
+
+
+def fit_batch_calibration(timings, batch_sizes=(2, 3, 4, 8)):
+    """Fit the §4.4 batching micro-model from real multi-point batch
+    timings (``cost_model.fit_batch_model``) and evaluate c_batch at the
+    sizes serving cares about.  The result is what ``JobSpec`` /
+    ``SimConfig.batch_timings`` consume — replacing the single pinned
+    ``c_batch_at`` measurement with a calibrated slope."""
+    from repro.core.cost_model import BatchModel
+    model = BatchModel.from_timings(timings)
+    return {
+        "t_startup": model.t_startup,
+        "t_task": model.t_task,
+        "c_batch": {str(b): model.c_batch(b) for b in batch_sizes},
+        "timings": [list(x) for x in timings],
+    }
+
+
 def write_capacity(records, out_path: str, cell: Optional[str] = None,
                    count_per_class: int = 8) -> int:
     """Aggregate the per-hardware ``r_cloud_est`` maps of ``records``
@@ -333,7 +362,33 @@ def main():
     ap.add_argument("--capacity-out", default=None,
                     help="write the roofline-calibrated CloudCapacity "
                          "(per-hardware r_cloud classes) to this JSON file")
+    ap.add_argument("--batch-times", default=None,
+                    help="measured batch timings 'b:sec,b:sec,...' "
+                         "(>= 2 points): fits the §4.4 batching "
+                         "micro-model so c_batch comes from real data "
+                         "instead of the pinned batch-2 extrapolation")
+    ap.add_argument("--batch-model-out", default=None,
+                    help="write the fitted batch model (t_startup, "
+                         "t_task, c_batch table) to this JSON file")
     args = ap.parse_args()
+
+    if args.batch_times:
+        cal = fit_batch_calibration(parse_batch_times(args.batch_times))
+        print("batch model fit: "
+              f"t_startup={cal['t_startup']:.6g}s "
+              f"t_task={cal['t_task']:.6g}s "
+              f"c_batch(2)={cal['c_batch']['2']:.4g} "
+              f"c_batch(4)={cal['c_batch']['4']:.4g}")
+        if args.batch_model_out:
+            with open(args.batch_model_out, "w") as f:
+                json.dump(cal, f, indent=1)
+            print(f"wrote batch model to {args.batch_model_out} "
+                  "(feed timings to JobSpec/SimConfig.batch_timings)")
+        if not (args.arch or args.cell or args.capacity_out
+                or args.save_hlo):
+            # pure calibration invocation: don't kick off the full
+            # arch x cell x mesh compile sweep as a side effect
+            return 0
 
     archs = [args.arch] if args.arch else ARCH_IDS
     cells = [args.cell] if args.cell else [c.name for c in SHAPE_CELLS]

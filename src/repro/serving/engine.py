@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost_model import CostParams, quantize_step, solve_n_cloud
+from repro.core.cost_model import CostParams
+from repro.core.planner import PlanRequest, Planner
 from repro.core.telemetry import DeviceProfile
 from repro.core.transport import (
     LinkProfile,
@@ -57,12 +58,22 @@ class SplitResult:
 
 class DiffusionSplitEngine:
     def __init__(self, params, cfg, cost: CostParams,
-                 link: LinkProfile = WAN_LINK, transfer_mode: str = "paper"):
+                 link: LinkProfile = WAN_LINK, transfer_mode: str = "paper",
+                 planner: Optional[Planner] = None):
         self.params = params
         self.cfg = cfg
         self.cost = cost
         self.link = link
         self.transfer_mode = transfer_mode
+        # the shared decision-maker: assign() delegates here, so the
+        # engine runs the exact per-request policy the simulators and
+        # the fleet planner use (pass a shared Planner to keep one
+        # adaptive-SLA state across engines).  solve_c_batch=cost.c_batch
+        # because this engine EXECUTES groups batched (process_group):
+        # the split must be sized for the batched rate, preserving the
+        # pre-planner solve bit-exactly for any c_batch
+        self.planner = planner if planner is not None else Planner(
+            cost, policy="variable", solve_c_batch=cost.c_batch)
         self._exec_cache: Dict[Tuple[int, int], Any] = {}
         self.stats = {"gpu_seconds": 0.0, "bytes_shipped": 0,
                       "requests": 0, "executables": 0}
@@ -81,8 +92,14 @@ class DiffusionSplitEngine:
         return self._exec_cache[key]
 
     def assign(self, device: DeviceProfile) -> int:
-        n = solve_n_cloud(device.r_dev, self.cost, device.rtt)
-        return quantize_step(n, self.cost.n_step, self.cost.n_total)
+        """Thin delegate into the unified planner: split solve + step
+        quantization (sized at ``cost.c_batch`` — see __init__)."""
+        return self.plan(device).n_final
+
+    def plan(self, device: DeviceProfile):
+        """Full ``PlanDecision`` for one device (JSON-serializable, with
+        the explain() trace) — what assign() is a projection of."""
+        return self.planner.plan(PlanRequest(device=device))
 
     def process_group(self, requests: List[Request], n_cloud: int,
                       seed: int = 0) -> List[SplitResult]:

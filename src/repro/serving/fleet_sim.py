@@ -4,11 +4,12 @@ heterogeneous cloud.
 
 The static ``serving.simulator`` assigns a fixed fleet in one shot; this
 module models the production system the paper argues for: requests
-arrive continuously (Poisson / bursty / diurnal), each arrival is
-assigned its ``n_final`` group by the SAME scheduler objects
-(``make_scheduler``), admitted requests wait in per-group batching
-windows (§4.4 online admission: a request only waits if it still meets
-its SLA at the batched rate), batches execute on a modeled GPU pool, and
+arrive continuously (Poisson / bursty / diurnal), each arrival flows
+through the unified planner (``core.planner.Planner.plan``: split solve
+-> quantize -> class routing -> §4.4 batching admission -> SLA), so one
+``PlanRequest``/``PlanDecision`` round-trip yields the ``n_final``
+group AND the window-admission verdict.  Admitted requests wait in
+per-group batching windows, batches execute on a modeled GPU pool, and
 an autoscaler driven by the §4.5 allocator grows the pool on a sliding
 demand horizon and releases idle GPUs back to production jobs.
 
@@ -58,10 +59,16 @@ import numpy as np
 
 from repro.core.capacity import CloudCapacity, GpuClass, reference_params
 from repro.core.cost_model import (
+    BatchModel,
     CostParams,
-    c_batch_at,
-    cloud_gpu_time,
     e2e_latency,
+)
+from repro.core.planner import (
+    DISPATCH_MODES,
+    PlanRequest,
+    Planner,
+    PoolSnapshot,
+    RoutePolicy,
 )
 from repro.core.scheduler import (
     Assignment,
@@ -77,14 +84,14 @@ from repro.core.telemetry import (
     fleet_sampler,
     poisson_arrivals,
 )
-from repro.serving.simulator import CALIBRATED, make_scheduler, table4_fleet
+from repro.serving.simulator import CALIBRATED, table4_fleet
 
 # event kinds, in tie-break priority order at equal timestamps: capacity
 # comes online before jobs are dispatched, arrivals before window flushes
 (EVT_CAPACITY, EVT_JOB_DONE, EVT_ARRIVAL, EVT_WINDOW, EVT_AUTOSCALE,
  EVT_COMPLETE, EVT_METRICS) = range(7)
-
-DISPATCH_MODES = ("fifo", "edf")
+# DISPATCH_MODES is canonical in core.planner (imported above) so the
+# planner and the dispatcher can never disagree on valid modes
 
 
 # --------------------------------------------------------------------------
@@ -107,6 +114,10 @@ class SimConfig:
     # batching windows (§4.4)
     batch_size: int = 2
     window_s: float = 1.0               # cap on any window's lifetime
+    #: real multi-point batch timings ((batch_size, seconds), ...):
+    #: calibrates the batching slope via fit_batch_model instead of the
+    #: single pinned c_batch_at measurement (None keeps the legacy path)
+    batch_timings: Optional[List[Tuple[int, float]]] = None
     # GPU pool + autoscaler (§4.5)
     #: heterogeneous capacity (core.capacity).  None builds a single
     #: homogeneous class from (params.r_cloud, gpus_init, min/max_gpus) —
@@ -360,12 +371,10 @@ class GpuPool:
 class HeterogeneousDispatcher:
     """Routes cloud jobs across per-class ``GpuPool``s.
 
-    ``deadline_aware=True`` ("edf" dispatch): a job goes to the CHEAPEST
-    class whose estimated finish (queue estimate + per-class service
-    time) still meets its cloud deadline; when none is feasible, to the
-    class finishing soonest.  ``deadline_aware=False`` ("fifo"): first
-    class (cheapest order) with a free GPU, else soonest-finish — the
-    deadline-blind baseline.
+    The routing RULE lives in the planner (``core.planner.RoutePolicy``
+    — cheapest deadline-feasible class under "edf", first free class
+    under "fifo"); this dispatcher owns the live queue state and asks
+    the policy, instead of inlining the decision.
 
     Per-class service time comes from ``cloud_gpu_time(..., r_cloud=
     class rate)``, so a 0.5x spot GPU holds a job twice as long but at a
@@ -373,7 +382,8 @@ class HeterogeneousDispatcher:
     """
 
     def __init__(self, capacity: CloudCapacity, p: CostParams,
-                 discipline: str = "fifo"):
+                 discipline: str = "fifo",
+                 route_policy: Optional[RoutePolicy] = None):
         if discipline not in DISPATCH_MODES:
             raise ValueError(f"unknown dispatch {discipline!r}; "
                              f"expected one of {DISPATCH_MODES}")
@@ -381,11 +391,12 @@ class HeterogeneousDispatcher:
         self.p = p
         self.discipline = discipline
         self.deadline_aware = discipline == "edf"
+        self.route_policy = route_policy if route_policy is not None else \
+            RoutePolicy(capacity, p, deadline_aware=self.deadline_aware)
         self.pools: Dict[str, GpuPool] = {
             c.name: GpuPool(c.count, c.min_count, c.max_count, gpu_class=c,
                             discipline=discipline)
             for c in capacity}
-        self._order = capacity.cheapest_first()
         # from the CLAMPED pool capacities (max(count, min_count)), not
         # the raw class counts — min_count > count would under-report
         self.peak_capacity = self.total_capacity
@@ -449,45 +460,22 @@ class HeterogeneousDispatcher:
     # -- routing -----------------------------------------------------------
     def service_on(self, cls: GpuClass, n_final: int,
                    batch_factor: float) -> float:
-        return cloud_gpu_time(n_final, self.p, batch_factor,
-                              r_cloud=cls.r_cloud)
+        return self.route_policy.service_on(cls, n_final, batch_factor)
+
+    def _snapshots(self) -> Dict[str, PoolSnapshot]:
+        return {
+            name: PoolSnapshot(
+                free=pl.busy < pl.capacity,
+                queue_delay=pl.queue_delay_estimate(),
+                routable=pl.capacity + pl.pending > 0)
+            for name, pl in self.pools.items()}
 
     def route(self, now: float, n_final: int, batch_factor: float,
               deadline: float) -> GpuClass:
-        """Pick the executing class for a job (see class docstring).
-
-        This is the queue-state-aware sibling of
-        ``core.scheduler.cheapest_feasible_class`` (the pure model-level
-        rule); keep their orderings in sync.  Classes with no capacity
-        and none pending are never routable — a job queued there would
-        strand forever (jobs stay in their routed class's queue, and the
-        spot-first autoscaler may never grow that class).
-        """
-        best, best_finish = None, math.inf
-        for cls in self._order:
-            pool = self.pools[cls.name]
-            if pool.capacity + pool.pending == 0:
-                continue
-            service = self.service_on(cls, n_final, batch_factor)
-            start = now if pool.busy < pool.capacity else (
-                now + pool.queue_delay_estimate())
-            finish = start + service
-            if self.deadline_aware:
-                if finish <= deadline + 1e-9:
-                    return cls
-            elif pool.busy < pool.capacity:
-                return cls
-            if finish < best_finish:
-                best, best_finish = cls, finish
-        if best is not None:
-            return best
-        # every pool is empty with nothing pending (possible at t=0 with
-        # autoscale on): queue where the spot-first autoscaler will grow
-        # capacity first
-        for cls in self.capacity_spec.scale_order():
-            if cls.max_count > 0:
-                return cls
-        return self._order[0]
+        """Ask the planner's RoutePolicy for the executing class, given
+        a snapshot of the live per-class queue state."""
+        return self.route_policy.choose(now, n_final, batch_factor,
+                                        deadline, self._snapshots())
 
     def submit(self, now: float, job: _Job) -> Optional[float]:
         pool = self.pools[job.gpu_class]
@@ -620,21 +608,29 @@ class FleetSimulator:
             # pool would queue cloud jobs forever and the run never ends
             raise ValueError("autoscale=False requires provisioned or "
                              "min capacity > 0")
-        self.scheduler = make_scheduler(cfg.policy, self.p,
-                                        worst_rtt=fleet[0].rtt,
-                                        batch_size=cfg.batch_size)
-        self.admission = (self.scheduler.admission()
-                          if self.scheduler.supports_batching
-                          and cfg.batch_size > 1 else None)
-        # batch-2 slowdown measurement, owned by the scheduler when the
-        # policy batches (single source of truth with admission)
-        self._c_batch_2 = getattr(self.scheduler, "c_batch_measured",
-                                  self.p.c_batch)
+        # THE decision-maker: every per-request split / batching /
+        # routing decision flows through this one Planner (the scheduler
+        # and admission objects below are views into it, kept as
+        # attributes for compat with pre-planner callers)
+        # audit=False: this loop makes thousands of decisions per run
+        # and keeps only the assignment + admission verdict — same
+        # pipeline, same values, no per-decision trace/replay payloads
+        # (build an audited Planner from the same config to inspect any
+        # single decision)
+        self.planner = Planner(
+            self.p, policy=cfg.policy, capacity=self.capacity_spec,
+            batch_size=cfg.batch_size,
+            batch_model=BatchModel.from_timings(cfg.batch_timings)
+            if cfg.batch_timings else None,
+            worst_rtt=fleet[0].rtt, dispatch=cfg.dispatch, audit=False)
+        self.scheduler = self.planner.scheduler
+        self.admission = self.planner.admission
         self.devices = fleet_sampler(fleet, seed=cfg.seed + 1,
                                      mode=cfg.sampling)
         self.arrivals = _make_arrivals(cfg)
-        self.pool = HeterogeneousDispatcher(self.capacity_spec, self.p,
-                                            discipline=cfg.dispatch)
+        self.pool = HeterogeneousDispatcher(
+            self.capacity_spec, self.p, discipline=cfg.dispatch,
+            route_policy=self.planner.route_policy)
         self.tracker = DeadlineTracker()
         # §7 adaptive SLA: observed utilization relaxes/tightens t_lim
         # for FUTURE arrivals (in-flight deadlines are contracts)
@@ -651,7 +647,9 @@ class FleetSimulator:
         self._win_version = itertools.count()
         self._events: List[Tuple[float, int, int, object]] = []
         self._seq = itertools.count()
-        # sliding-horizon workload for the §4.5 autoscaler: (t, n_final)
+        # sliding-horizon demand window for the §4.5 autoscaler:
+        # (t, n_final, r_dev, rtt) — the profile terms feed the
+        # deadline-aware per-class floors
         self._demand: deque = deque()
         self.completed: List[CompletedRequest] = []
         self.timeseries: List[Dict] = []
@@ -715,43 +713,41 @@ class FleetSimulator:
 
     # -- adaptive SLA ------------------------------------------------------
     def _set_t_lim(self, t_lim: float) -> None:
-        """Apply a new SLA target to FUTURE arrivals: the per-request
-        solver (scheduler) and the batching admission both see it;
-        in-flight deadlines are unchanged (they are contracts fixed at
-        arrival — see core.sla.RequestDeadline)."""
+        """Apply a new SLA target to FUTURE arrivals via the planner's
+        §7 hook: the per-request solver (scheduler) and the batching
+        admission both see it; in-flight deadlines are unchanged (they
+        are contracts fixed at arrival — see core.sla.RequestDeadline)."""
         if t_lim == self._t_lim_now:
             return
         self._t_lim_now = t_lim
-        newp = dataclasses.replace(self.p, t_lim=t_lim)
-        self.scheduler.p = newp
-        if self.admission is not None:
-            self.admission.p = newp
+        self.planner.set_t_lim(t_lim, source="adaptive(§7)")
 
     # -- handlers ----------------------------------------------------------
     def _on_arrival(self, t: float) -> None:
         prof = next(self.devices)
         rid = f"r{self.n_arrivals}"
         self.n_arrivals += 1
-        a = self.scheduler.assign_one(prof)
+        # one request in, one decision out: split solve, quantization,
+        # batching admission (and the advisory class route) all come
+        # from the planner pipeline in a single call
+        decision = self.planner.plan(PlanRequest(
+            device=prof, request_id=rid,
+            queue_delay_hint=self.pool.queue_delay_estimate()))
+        a = decision.assignment()
         req = SimRequest(request_id=rid, arrival=t, profile=prof,
                          assignment=a)
         self.tracker.open(rid, t, self._t_lim_now)
-        self._demand.append((t, a.n_final))
+        self._demand.append((t, a.n_final, prof.r_dev, prof.rtt))
 
         if a.n_final <= 0:
             # device-only: no cloud resources at all
             done = t + e2e_latency(0, prof.r_dev, self.p, prof.rtt,
                                    c_batch=1.0)
             self._push(done, EVT_COMPLETE, req)
+        elif decision.batch_admit:
+            self._join_window(t, req, decision.batch_max_wait)
         else:
-            dec = (self.admission.decide(
-                       a.n_final, prof.r_dev, prof.rtt,
-                       queue_delay_hint=self.pool.queue_delay_estimate())
-                   if self.admission else None)
-            if dec is not None and dec.admit:
-                self._join_window(t, req, dec.max_wait)
-            else:
-                self._dispatch(t, [req])
+            self._dispatch(t, [req])
 
         self._next_arrival = next(self.arrivals, None)
         if self._next_arrival is not None:
@@ -813,10 +809,11 @@ class FleetSimulator:
         n_final = members[0].assignment.n_final
         b = len(members)
         batched = b >= 2
-        # a batch of b runs at the batch-b slowdown (c_batch is measured
-        # at batch 2; other sizes extrapolate through the §4.4 linear
-        # micro-model); a solo run pays no batching penalty
-        cb = c_batch_at(self._c_batch_2, b) if batched else 1.0
+        # a batch of b runs at the batch-b slowdown: the planner owns
+        # the batching constants (the §4.4 extrapolation from the pinned
+        # batch-2 measurement, or the fitted BatchModel when calibrated
+        # timings were given); a solo run pays no batching penalty
+        cb = self.planner.c_batch_of(b) if batched else 1.0
         deadline = self._cloud_deadline(members)
         cls = self.pool.route(t, n_final, cb, deadline)
         service = self.pool.service_on(cls, n_final, cb)
@@ -866,7 +863,7 @@ class FleetSimulator:
                 self._set_t_lim(self.sla_ctl.update(d_busy / d_cap))
         while self._demand and self._demand[0][0] < t - cfg.horizon_s:
             self._demand.popleft()
-        wg = group_workloads(n for _, n in self._demand)
+        wg = group_workloads(n for _, n, _, _ in self._demand)
         summary = ScheduleSummary(
             name=cfg.policy, assignments=[], total_gpu_time=0.0,
             latencies=[], violations=0, group_workloads=wg)
@@ -875,11 +872,26 @@ class FleetSimulator:
         # demand ~(horizon/t)x and release the warm pool into a queue
         # transient — normalize by the window actually observed
         seen = min(cfg.horizon_s, t)
+        # the same demand window, with per-request device profiles:
+        # deadline-aware floors keep spot-first scaling from starving
+        # the reserved class when spot is too slow for tight deadlines
+        # (no-op for a homogeneous pool — the golden-trace anchor).
+        # planner.p, not self.p: under adaptive SLA the floors must
+        # judge feasibility against the t_lim new arrivals are actually
+        # being solved for (same r_cloud, so the supply sizing is
+        # unchanged)
         plan = allocate_gpus_heterogeneous(
-            summary, self.p, self.capacity_spec,
+            summary, self.planner.p, self.capacity_spec,
             current=self.pool.current_counts(), horizon_s=seen,
             headroom=cfg.headroom,
-            release_threshold=cfg.release_threshold)
+            release_threshold=cfg.release_threshold,
+            demands=[(n, r_dev, rtt)
+                     for _, n, r_dev, rtt in self._demand],
+            # feasibility at the slowdown jobs actually run at: batched
+            # jobs hold a slow class longer, which is what starves the
+            # reserved slice under blind spot-first scaling
+            demand_c_batch=self.planner.c_batch_of(cfg.batch_size)
+            if self.admission is not None else 1.0)
         for name, target in plan.targets.items():
             pl = self.pool.pools[name]
             provisioned_total = pl.capacity + pl.pending

@@ -14,18 +14,21 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.cost_model import CostParams
+from repro.core.planner import (
+    POLICIES,
+    SLOWEST_DEVICE,
+    make_scheduler as _planner_make_scheduler,
+)
 from repro.core.scheduler import (
-    AllCloudScheduler,
-    ConstantIterationScheduler,
     IntelligentBatchingScheduler,
     ScheduleSummary,
-    VariableIterationScheduler,
 )
 from repro.core.telemetry import DeviceProfile, generate_fleet, upgrade_fleet
 
 CALIBRATED = CostParams(r_cloud=62.5, n_total=50, n_step=5, t_lim=8.5,
                         k_decode=2.0, c_batch=1.6)
-SLOWEST_DEVICE = 1.44          # iPhone 12 mini (paper §5.4)
+# SLOWEST_DEVICE (iPhone 12 mini, paper §5.4) is canonical in
+# core.planner and re-exported here for compat
 FASTEST_DEVICE = 3.07          # M2 iPad Pro
 C_BATCH = 1.6                  # paper §5.5 (batch of 2 on A40)
 
@@ -59,8 +62,10 @@ def run_table4(n_devices: int = 1000, seed: int = 0,
     return run_schedulers(table4_fleet(n_devices, seed, params, rtt), params)
 
 
-#: The four Table-4 policies, in paper order.
-POLICIES = ("all_cloud", "constant", "variable", "variable+batching")
+#: The four Table-4 policies, in paper order (canonical definition in
+#: core.planner; re-exported here for compat).
+assert POLICIES == ("all_cloud", "constant", "variable",
+                    "variable+batching")
 
 
 def table4_capacity(params: CostParams = CALIBRATED, base_count: int = 8,
@@ -89,21 +94,16 @@ def table4_capacity(params: CostParams = CALIBRATED, base_count: int = 8,
 
 def make_scheduler(name: str, params: CostParams,
                    worst_r_dev: float = SLOWEST_DEVICE,
-                   worst_rtt: float = 0.3, batch_size: int = 2):
-    """Single factory for the Table-4 policies — shared by the static
-    snapshot path below and the event-driven ``serving.fleet_sim``, so
-    both always run the exact same per-request assignment logic."""
-    if name == "all_cloud":
-        return AllCloudScheduler(params)
-    if name == "constant":
-        return ConstantIterationScheduler(params, worst_r_dev=worst_r_dev,
-                                          worst_rtt=worst_rtt)
-    if name == "variable":
-        return VariableIterationScheduler(params)
-    if name == "variable+batching":
-        return IntelligentBatchingScheduler(params, c_batch=params.c_batch,
-                                            batch_size=batch_size)
-    raise ValueError(f"unknown policy {name!r}; expected one of {POLICIES}")
+                   worst_rtt: float = 0.3, batch_size: int = 2,
+                   batch_model=None):
+    """Thin delegate to ``core.planner.make_scheduler`` — the single
+    factory behind the planner, the static snapshot path below, and the
+    event-driven ``serving.fleet_sim``, so every surface always runs the
+    exact same per-request assignment logic."""
+    return _planner_make_scheduler(name, params, worst_r_dev=worst_r_dev,
+                                   worst_rtt=worst_rtt,
+                                   batch_size=batch_size,
+                                   batch_model=batch_model)
 
 
 def run_schedulers(fleet: List[DeviceProfile],

@@ -1,0 +1,488 @@
+"""Unified Planner API: decision protocol, replay determinism,
+planner-vs-legacy equivalence, deadline-aware allocation, and the
+fitted batch-model calibration path (hypothesis + fixed-case, per
+tests/conftest.py)."""
+import json
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import (
+    CALIBRATED,
+    POLICIES,
+    BatchModel,
+    CloudCapacity,
+    DeviceProfile,
+    GpuClass,
+    NetworkProfile,
+    PlanDecision,
+    PlanRequest,
+    Planner,
+    SimConfig,
+    allocate_gpus_heterogeneous,
+    cheapest_feasible_class,
+    deadline_floors,
+    make_scheduler,
+    replay,
+    run_fleet_sim,
+    run_table4,
+    table4_capacity,
+    table4_fleet,
+)
+from repro.core.cost_model import CostParams, c_batch_at, c_batch_of
+from repro.core.scheduler import ScheduleSummary, group_workloads
+
+
+def _planner(policy="variable+batching", capacity=None, **kw):
+    return Planner(CALIBRATED, policy=policy, capacity=capacity, **kw)
+
+
+def _request(r_dev=2.25, rtt=0.3, hint=0.0, rid="r0"):
+    return PlanRequest(device=DeviceProfile("d0", r_dev=r_dev, rtt=rtt,
+                                            k_decode=CALIBRATED.k_decode),
+                       queue_delay_hint=hint, request_id=rid)
+
+
+# --------------------------------------------------------------------------
+# Decision protocol: JSON round-trip + deterministic replay
+# --------------------------------------------------------------------------
+def _check_roundtrip_and_replay(policy, r_dev, rtt, hint):
+    planner = _planner(policy, capacity=table4_capacity(), dispatch="edf")
+    d = planner.plan(_request(r_dev=r_dev, rtt=rtt, hint=hint))
+    wire = json.dumps(d.to_json())                    # JSON-serializable
+    back = PlanDecision.from_json(json.loads(wire))
+    assert back.to_json() == d.to_json()              # round trip
+    assert replay(wire).to_json() == d.to_json()      # deterministic replay
+    # the reconstructed legacy Assignment matches the live one bit-exactly
+    a, b = d.assignment(), back.assignment()
+    assert (a.n_exact, a.n_final, a.latency, a.feasible) == \
+        (b.n_exact, b.n_final, b.latency, b.feasible)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_roundtrip_and_replay_fixed(policy):
+    _check_roundtrip_and_replay(policy, r_dev=2.25, rtt=0.3, hint=0.25)
+
+
+@given(policy=st.sampled_from(POLICIES),
+       r_dev=st.floats(0.5, 6.0), rtt=st.floats(0.0, 1.0),
+       hint=st.floats(0.0, 5.0))
+@settings(max_examples=25, deadline=None)
+def test_roundtrip_and_replay_property(policy, r_dev, rtt, hint):
+    _check_roundtrip_and_replay(policy, r_dev, rtt, hint)
+
+
+def test_replay_carries_adapted_sla():
+    """set_t_lim (the §7 hook) folds into the serialized params, so a
+    decision made under a relaxed SLA replays under that same SLA."""
+    planner = _planner("variable")
+    planner.set_t_lim(12.0)
+    d = planner.plan(_request(r_dev=1.6))
+    assert d.t_lim == 12.0
+    assert replay(d.to_json()).to_json() == d.to_json()
+    sla = [e for e in d.trace if e["field"] == "t_lim"]
+    assert sla and sla[0]["policy"].startswith("sla:adaptive")
+
+
+def test_explain_names_a_policy_per_field():
+    d = _planner(capacity=table4_capacity()).plan(_request())
+    traced = {e["field"] for e in d.trace}
+    for field in ("n_exact", "n_final", "latency", "feasible",
+                  "gpu_class", "gpu_time", "batch_admit", "t_lim"):
+        assert field in traced
+    assert all(e["policy"] for e in d.trace)
+    text = d.explain()
+    assert "split:variable+batching" in text
+    assert "quantize:n_step=5" in text
+    assert "batching:" in text
+
+
+def test_network_profile_overrides_device_link():
+    """Live network measurements beat the profile's last-reported rtt."""
+    slow = _planner("variable").plan(_request(r_dev=2.25, rtt=0.3))
+    fast = Planner(CALIBRATED, policy="variable").plan(PlanRequest(
+        device=DeviceProfile("d0", r_dev=2.25, rtt=0.3,
+                             k_decode=CALIBRATED.k_decode),
+        network=NetworkProfile(rtt=0.05)))
+    assert fast.n_final <= slow.n_final
+    assert fast.request["network"]["rtt"] == 0.05
+    assert replay(fast.to_json()).to_json() == fast.to_json()
+
+
+# --------------------------------------------------------------------------
+# Planner-vs-legacy equivalence on the Table-4 fleet
+# --------------------------------------------------------------------------
+def test_planner_matches_legacy_schedulers_on_table4_fleet():
+    """Per-request planner output == the legacy scheduler objects the
+    static Table-4 path runs, for every policy (bit-exact)."""
+    fleet = table4_fleet(seed=0)
+    for policy in POLICIES:
+        sched = make_scheduler(policy, CALIBRATED, worst_rtt=fleet[0].rtt)
+        planner = _planner(policy, worst_rtt=fleet[0].rtt)
+        for prof in fleet[::37]:
+            a = sched.assign_one(prof)
+            d = planner.plan(PlanRequest(device=prof))
+            assert d.n_exact == a.n_exact
+            assert d.n_final == a.n_final
+            assert d.latency == a.latency
+            assert d.feasible == a.feasible
+
+
+def test_planner_gpu_time_matches_table4_totals():
+    """Summing planner-predicted GPU time over the fleet reproduces the
+    static Table-4 totals bit-exactly for the non-batching policies
+    (batching pairs over a snapshot, which a per-request plan can't)."""
+    fleet = table4_fleet(seed=0)
+    static = run_table4(1000, seed=0)
+    for policy in ("all_cloud", "constant", "variable"):
+        planner = _planner(policy, worst_rtt=fleet[0].rtt)
+        total = sum(planner.plan(PlanRequest(device=p)).gpu_time
+                    for p in fleet)
+        assert total == pytest.approx(static[policy].total_gpu_time,
+                                      rel=0, abs=1e-9)
+
+
+def test_planner_advisory_route_matches_cheapest_feasible_class():
+    cap = table4_capacity()
+    planner = _planner("variable", capacity=cap)
+    for r_dev in (1.5, 2.25, 3.0):
+        d = planner.plan(_request(r_dev=r_dev))
+        if d.n_final > 0:
+            want = cheapest_feasible_class(d.n_final, r_dev, 0.3,
+                                           planner.p, cap)
+            assert d.gpu_class == want.name
+            assert d.cloud_rate == want.r_cloud
+
+
+def test_golden_trace_invariance_is_pinned():
+    """The FIFO fleet_sim golden trace must be unchanged through the
+    planner migration — same numbers test_golden_trace pins, asserted
+    here against the planner-driven run via the facade imports."""
+    import hashlib
+    cfg = SimConfig(policy="variable+batching", rate=12.0, duration=40.0,
+                    seed=7, gpus_init=10, max_gpus=32,
+                    metrics_interval_s=10.0)
+    res = run_fleet_sim(cfg)
+    sig = hashlib.sha256()
+    for c in res.completed:
+        sig.update(f"{c.request_id}:{c.completion:.9f}:{c.batched:d};"
+                   .encode())
+    assert (res.n_arrivals, len(res.completed), res.violations,
+            round(res.total_gpu_seconds, 9),
+            sig.hexdigest()[:16]) == (490, 490, 0, 249.312,
+                                      "af766f3924e39378")
+
+
+# --------------------------------------------------------------------------
+# Batch-model calibration (fit_batch_model wired through the planner)
+# --------------------------------------------------------------------------
+def test_solve_c_batch_preserves_engine_semantics():
+    """The split engine sizes its solve at cost.c_batch (it executes
+    groups batched) — `solve_c_batch` must reproduce the pre-planner
+    `solve_n_cloud(r_dev, cost, rtt)` default bit-exactly, including
+    through serialization + replay."""
+    from repro.core.cost_model import quantize_step, solve_n_cloud
+    cost = CostParams(r_cloud=40.0, n_total=50, n_step=5, t_lim=8.5,
+                      k_decode=1.0, c_batch=1.6)
+    planner = Planner(cost, policy="variable", solve_c_batch=cost.c_batch)
+    for r_dev, rtt in ((1.5, 0.05), (2.25, 0.3), (4.0, 0.1)):
+        legacy_n = solve_n_cloud(r_dev, cost, rtt)   # default cb=c_batch
+        legacy = quantize_step(legacy_n, cost.n_step, cost.n_total)
+        d = planner.plan(PlanRequest(
+            device=DeviceProfile("d", r_dev=r_dev, rtt=rtt)))
+        assert d.n_exact == legacy_n
+        assert d.n_final == legacy
+        assert replay(d.to_json()).to_json() == d.to_json()
+    # at c_batch=1.6 this genuinely differs from the solo-rate solve
+    solo = Planner(cost, policy="variable")
+    assert solo.plan(PlanRequest(
+        device=DeviceProfile("d", r_dev=1.5, rtt=0.05))).n_final != \
+        planner.plan(PlanRequest(
+            device=DeviceProfile("d", r_dev=1.5, rtt=0.05))).n_final
+
+
+def test_batch_model_rejects_decreasing_timings():
+    """A fit with negative t_task (batch times shrinking with b) must
+    fail loudly, not produce c_batch < 1 / negative service times."""
+    with pytest.raises(ValueError):
+        BatchModel.from_timings([(1, 0.02), (2, 0.01)])
+    with pytest.raises(ValueError):
+        BatchModel(t_startup=0.03, t_task=-0.01)
+    with pytest.raises(ValueError):
+        BatchModel(t_startup=0.0, t_task=0.0)
+    # repeat measurements at one batch size: no slope to fit
+    with pytest.raises(ValueError):
+        BatchModel.from_timings([(2, 0.10), (2, 0.11)])
+
+
+def test_non_audit_plan_matches_audit_values():
+    """audit=False (the fleet simulator's hot-loop mode) must produce
+    the same decision VALUES as the audited pipeline — it only skips
+    the trace/replay payloads and the advisory route."""
+    audited = _planner("variable+batching")
+    fast = Planner(CALIBRATED, policy="variable+batching", audit=False)
+    for r_dev in (1.5, 2.25, 3.0, 50.0):
+        a = audited.plan(_request(r_dev=r_dev, hint=0.2))
+        f = fast.plan(_request(r_dev=r_dev, hint=0.2))
+        assert (f.n_exact, f.n_final, f.latency, f.feasible,
+                f.gpu_time, f.batch_admit, f.batch_max_wait, f.t_lim) \
+            == (a.n_exact, a.n_final, a.latency, a.feasible,
+                a.gpu_time, a.batch_admit, a.batch_max_wait, a.t_lim)
+    assert f.trace == [] and f.request == {} and f.planner == {}
+    assert a.trace and a.planner
+    # non-audit decisions refuse replay with a clear error, not KeyError
+    with pytest.raises(ValueError, match="audit=False"):
+        f.replay()
+    with pytest.raises(ValueError, match="audit=False"):
+        PlanDecision.from_json(f.to_json()).assignment()
+
+
+def test_deadline_floors_clamped_demand_does_not_spill():
+    """Demand a max_count-clamped fast class cannot cover must not pin
+    slower classes that cannot meet its SLA anyway."""
+    cap = CloudCapacity((
+        GpuClass("fast", r_cloud=62.5, count=2, max_count=2),
+        GpuClass("mid", r_cloud=31.0, count=4, max_count=64),
+        GpuClass("slow", r_cloud=10.0, count=4, preemptible=True,
+                 cost_weight=0.2, max_count=64),
+    ))
+    # heavy demand feasible ONLY on the fast class
+    demands = [(35, 2.1, 0.3)] * 600
+    floors = deadline_floors(demands, CALIBRATED, cap, horizon_s=30.0,
+                             headroom=1.3, c_batch=1.6)
+    assert floors["fast"] == 2          # clamped at max_count
+    assert floors["mid"] == 0           # residual must not spill here
+    assert floors["slow"] == 0
+
+
+def test_config_cache_invalidated_by_set_t_lim():
+    planner = _planner("variable")
+    before = planner.plan(_request()).planner
+    planner.set_t_lim(20.0)
+    after = planner.plan(_request()).planner
+    assert before["params"]["t_lim"] == CALIBRATED.t_lim
+    assert after["params"]["t_lim"] == 20.0
+
+
+def test_batch_model_fit_recovers_constants():
+    model = BatchModel.from_timings([(1, 0.026), (2, 0.036), (4, 0.056),
+                                     (8, 0.096)])
+    assert model.t_startup == pytest.approx(0.016, abs=1e-12)
+    assert model.t_task == pytest.approx(0.010, abs=1e-12)
+    assert model.c_batch(2) == pytest.approx(0.036 / 0.026)
+    assert model.c_batch(1) == 1.0
+
+
+def test_planner_uses_fitted_batch_slope():
+    """batch_timings on the planner replaces the pinned c_batch_at
+    extrapolation with the fitted c_batch_of slope — visibly different
+    at batch 3 when the measured points disagree with the pin."""
+    timings = [(1, 0.026), (2, 0.036), (4, 0.056)]
+    model = BatchModel.from_timings(timings)
+    planner = Planner(CALIBRATED, policy="variable+batching",
+                      batch_model=model)
+    assert planner.c_batch_of(3) == pytest.approx(
+        c_batch_of(3, 0.016, 0.010))
+    assert planner.c_batch_of(3) != c_batch_at(CALIBRATED.c_batch, 3)
+    # scheduler and admission share the same fitted constants
+    assert planner.scheduler.c_batch_measured == \
+        pytest.approx(model.c_batch_2)
+    assert planner.admission is not None
+    assert planner.admission.c_batch == pytest.approx(model.c_batch(2))
+    # and the model replays through the serialized decision
+    d = planner.plan(_request())
+    assert d.planner["batch_model"] == {"t_startup": model.t_startup,
+                                        "t_task": model.t_task}
+    assert replay(d.to_json()).to_json() == d.to_json()
+
+
+def test_fleet_sim_accepts_batch_timings():
+    """SimConfig.batch_timings drives batched jobs at the fitted rate:
+    a batched pair's GPU-second share is n * c_fit(2) / r_cloud / 2."""
+    fleet = [DeviceProfile(device_id="d", r_dev=2.5,
+                           k_decode=CALIBRATED.k_decode)]
+    timings = [(1, 0.0260), (2, 0.0370), (4, 0.0590)]
+    c2 = BatchModel.from_timings(timings).c_batch(2)
+    cfg = SimConfig(policy="variable+batching", rate=40.0, duration=20.0,
+                    seed=2, fleet=fleet, gpus_init=40, max_gpus=64,
+                    batch_timings=timings)
+    res = run_fleet_sim(cfg)
+    batched = [c for c in res.completed if c.batched]
+    assert batched
+    n = batched[0].n_final
+    assert batched[0].gpu_seconds == pytest.approx(
+        n * c2 / CALIBRATED.r_cloud / 2.0)
+
+
+def test_dryrun_batch_calibration_helpers():
+    from repro.launch.dryrun import fit_batch_calibration, parse_batch_times
+    pairs = parse_batch_times("1:0.026,2:0.036,4:0.056")
+    assert pairs == ((1, 0.026), (2, 0.036), (4, 0.056))
+    cal = fit_batch_calibration(pairs)
+    assert cal["t_startup"] == pytest.approx(0.016, abs=1e-12)
+    assert cal["c_batch"]["2"] == pytest.approx(0.036 / 0.026)
+    with pytest.raises(ValueError):
+        parse_batch_times("2:0.036")
+
+
+# --------------------------------------------------------------------------
+# Deadline-aware allocation (the docs/capacity.md starvation caveat)
+# --------------------------------------------------------------------------
+def _two_class(base_count=8, spot_count=8, base_max=64, spot_max=64):
+    return CloudCapacity((
+        GpuClass("base", r_cloud=CALIBRATED.r_cloud, count=base_count,
+                 min_count=1, max_count=base_max),
+        GpuClass("spot", r_cloud=CALIBRATED.r_cloud * 0.5,
+                 count=spot_count, preemptible=True, cost_weight=0.3,
+                 max_count=spot_max),
+    ))
+
+
+def _tight_demands(n=400):
+    """Demand that is infeasible on the 0.5x spot class (batched or
+    solo) but feasible on base: the starvation scenario."""
+    out = []
+    for i in range(n):
+        r_dev = 2.0 + 0.01 * (i % 10)
+        out.append((35, r_dev, 0.3))
+    return out
+
+
+def test_deadline_floors_pin_reserved_class():
+    cap = _two_class()
+    demands = _tight_demands()
+    floors = deadline_floors(demands, CALIBRATED, cap, horizon_s=30.0,
+                             headroom=1.3, c_batch=1.6)
+    # tight demand can only run on base: the floor covers it there
+    assert floors["base"] > 8
+    # the slowest class never gets a floor (aggregate supply is the
+    # reference plan's job)
+    assert floors["spot"] == 0
+
+
+def test_deadline_floors_homogeneous_are_zero():
+    cap = CloudCapacity.from_scalar(CALIBRATED.r_cloud, count=8)
+    floors = deadline_floors(_tight_demands(), CALIBRATED, cap,
+                             horizon_s=30.0, headroom=1.3)
+    assert floors == {"default": 0}
+
+
+def test_allocator_grows_reserved_class_for_tight_demand():
+    """The caveat fix end-to-end at the allocator level: with demands,
+    spot-first scaling no longer starves base; without, it does."""
+    cap = _two_class()
+    demands = _tight_demands()
+    wg = group_workloads(n for n, _, _ in demands)
+    summary = ScheduleSummary(name="x", assignments=[], total_gpu_time=0.0,
+                              latencies=[], violations=0,
+                              group_workloads=wg)
+    current = {"base": 8, "spot": 8}
+    kw = dict(horizon_s=30.0, headroom=1.3)
+    blind = allocate_gpus_heterogeneous(summary, CALIBRATED, cap,
+                                        current, **kw)
+    aware = allocate_gpus_heterogeneous(summary, CALIBRATED, cap, current,
+                                        demands=demands,
+                                        demand_c_batch=1.6, **kw)
+    assert blind.targets["base"] == 8          # starved: spot has headroom
+    assert aware.targets["base"] > 8           # feasibility floor grew it
+    assert aware.floors["base"] == aware.targets["base"] or \
+        aware.targets["base"] >= aware.floors["base"]
+    # supply still covers the reference need in both plans
+    assert cap.supply(aware.targets) >= aware.needed_supply - 1e-6
+
+
+def _check_homogeneous_plan_unchanged(n_gpus, w, horizon, headroom):
+    """Property: on a homogeneous pool the demand-aware plan is EXACTLY
+    the legacy scalar plan (the golden-trace anchor)."""
+    cap = CloudCapacity.from_scalar(CALIBRATED.r_cloud, count=n_gpus)
+    demands = [(w, 2.25, 0.3)] * 40
+    wg = group_workloads(n for n, _, _ in demands)
+    summary = ScheduleSummary(name="x", assignments=[], total_gpu_time=0.0,
+                              latencies=[], violations=0,
+                              group_workloads=wg)
+    current = {"default": n_gpus}
+    kw = dict(horizon_s=horizon, headroom=headroom)
+    legacy = allocate_gpus_heterogeneous(summary, CALIBRATED, cap,
+                                         current, **kw)
+    aware = allocate_gpus_heterogeneous(summary, CALIBRATED, cap, current,
+                                        demands=demands,
+                                        demand_c_batch=1.6, **kw)
+    assert aware.targets == legacy.targets
+
+
+@pytest.mark.parametrize("n_gpus,w", [(2, 35), (8, 50), (24, 5)])
+def test_homogeneous_plan_unchanged_fixed(n_gpus, w):
+    _check_homogeneous_plan_unchanged(n_gpus, w, horizon=30.0, headroom=1.3)
+
+
+@given(n_gpus=st.integers(1, 64), w=st.integers(0, 50),
+       horizon=st.floats(5.0, 120.0), headroom=st.floats(1.0, 2.0))
+@settings(max_examples=30, deadline=None)
+def test_homogeneous_plan_unchanged_property(n_gpus, w, horizon, headroom):
+    _check_homogeneous_plan_unchanged(n_gpus, w, horizon, headroom)
+
+
+def test_deadline_floors_track_effective_t_lim():
+    """A relaxed SLA makes spot feasible again: floors must follow the
+    t_lim new arrivals are solved for, not the initial one (the
+    adaptive-SLA wiring bug class)."""
+    import dataclasses
+    cap = _two_class()
+    demands = _tight_demands()
+    tight = deadline_floors(demands, CALIBRATED, cap, horizon_s=30.0,
+                            headroom=1.3, c_batch=1.6)
+    relaxed_p = dataclasses.replace(CALIBRATED, t_lim=20.0)
+    relaxed = deadline_floors(demands, relaxed_p, cap, horizon_s=30.0,
+                              headroom=1.3, c_batch=1.6)
+    assert tight["base"] > 8
+    assert relaxed["base"] == 0        # everything fits on spot at 20s
+
+
+def test_adaptive_sla_with_hetero_capacity_runs():
+    """§7 adaptive SLA + multi-class capacity + deadline-aware floors
+    together: the run must terminate with every arrival completed."""
+    cap = table4_capacity(base_count=4, spot_count=8, base_max=16,
+                          spot_max=32, spot_ratio=0.5)
+    cfg = SimConfig(policy="variable+batching", process="bursty",
+                    rate=20.0, duration=60.0, seed=3, capacity=cap,
+                    dispatch="edf", adaptive_sla=True, sla_ceil=30.0)
+    res = run_fleet_sim(cfg)
+    assert len(res.completed) == res.n_arrivals > 0
+    assert res.final_t_lim >= CALIBRATED.t_lim
+
+
+def test_fleet_sim_reserved_class_grows_at_spot_half_rate():
+    """End-to-end caveat fix (examples/continuous_serving.py at
+    spot_ratio=0.5): under diurnal load with 0.5x spot, the reserved
+    base class must grow past its initial count instead of saturating
+    while spot sits idle."""
+    cap = table4_capacity(base_count=8, spot_count=8, base_max=32,
+                          spot_max=64, spot_ratio=0.5)
+    cfg = SimConfig(policy="variable+batching", params=CALIBRATED,
+                    process="diurnal", rate=20.0, duration=120.0,
+                    diurnal_period_s=120.0, seed=0, capacity=cap,
+                    dispatch="edf", metrics_interval_s=30.0)
+    res = run_fleet_sim(cfg)
+    assert res.per_class["base"]["peak"] > cap["base"].count
+    assert res.violation_rate() < 0.15
+
+
+# --------------------------------------------------------------------------
+# plan_counts floors plumbing (capacity level)
+# --------------------------------------------------------------------------
+def test_plan_counts_respects_floors():
+    cap = _two_class(base_count=2, spot_count=2)
+    # floors raise the base start; release never drops below them
+    targets = cap.plan_counts(10 * CALIBRATED.r_cloud,
+                              current={"base": 2, "spot": 2},
+                              floors={"base": 6})
+    assert targets["base"] >= 6
+    # zero-need release run: base stays at its floor, not min_count
+    targets = cap.plan_counts(0.0, current={"base": 8, "spot": 8},
+                              floors={"base": 5})
+    assert targets["base"] == 5
+    assert targets["spot"] == 0
+    # floors clamp at max_count
+    targets = cap.plan_counts(0.0, current={"base": 2, "spot": 2},
+                              floors={"base": 10_000})
+    assert targets["base"] == 64
