@@ -1,5 +1,6 @@
 """Arrival-rate x policy sweep of the event-driven fleet simulator,
-plus the heterogeneous-capacity EDF-vs-FIFO comparison.
+plus the heterogeneous-capacity EDF-vs-FIFO comparison and the spot
+preemption reclaim-rate cells.
 
 For each (policy, rate) cell: run the continuous simulator over the
 Table-4 fleet, report p99 latency, SLA violation rate, GPU utilization
@@ -8,6 +9,12 @@ and normalized cloud GPU-seconds.  The heterogeneous cell runs the
 diurnal trace twice — deadline-blind FIFO vs EDF + deadline-aware
 class routing — on the SAME provisioned capacity (equal GPU cost), and
 reports the p99/violation gap.
+
+The preemption cells (docs/preemption.md) run the same 2-class pool
+with Poisson spot reclaim at each configured rate, comparing
+kill-and-naive-requeue against replan-on-preemption + admission-level
+shedding on identical capacity/autoscaler config (equal provisioned
+cost) — the replan+shed column must win p99 AND violations.
 
 Results land in ``BENCH_fleet_sim.json`` (repo root by default) so the
 perf trajectory is machine-readable across PRs:
@@ -44,6 +51,15 @@ SMOKE_DURATION = 40.0
 #: matters) without melting down.
 HETERO = dict(rate=20.0, duration=300.0, period_s=300.0,
               base_count=12, spot_count=20)
+
+#: The spot-preemption demonstration cells: the same diurnal day on a
+#: spot-heavy pool with Poisson reclaim.  Rates are reclaims/s per
+#: provisioned spot GPU (0.05 ~= each spot GPU survives ~20 s — an
+#: aggressively volatile market, so one compressed day shows dozens of
+#: kills).
+PREEMPT = dict(rate=20.0, duration=300.0, period_s=300.0,
+               base_count=8, spot_count=16, base_max=16, spot_max=48,
+               preempt_rates=(0.02, 0.05))
 
 
 def _cell_record(policy, rate, res, keep_timeseries=False):
@@ -99,6 +115,56 @@ def hetero_comparison(seed=0, rate=HETERO["rate"],
     return out
 
 
+def preemption_comparison(seed=0, duration=PREEMPT["duration"],
+                          period_s=PREEMPT["period_s"],
+                          preempt_rates=PREEMPT["preempt_rates"]):
+    """Replan-on-preemption + shedding vs kill-and-naive-requeue on the
+    SAME spot-heavy 2-class pool and autoscaler config (equal
+    provisioned cost), at each reclaim rate.  The reclaim-rate=0 column
+    is the preemption-free baseline: it isolates what the shedding
+    valve alone does before any reclaim pressure exists."""
+    cap = table4_capacity(base_count=PREEMPT["base_count"],
+                          spot_count=PREEMPT["spot_count"],
+                          base_max=PREEMPT["base_max"],
+                          spot_max=PREEMPT["spot_max"])
+    common = dict(policy="variable+batching", params=CALIBRATED,
+                  process="diurnal", rate=PREEMPT["rate"],
+                  duration=duration, diurnal_period_s=period_s,
+                  seed=seed, capacity=cap, dispatch="edf")
+    out = {"capacity": cap.to_json(), "seed": seed,
+           "rate": PREEMPT["rate"], "duration": duration, "cells": []}
+    for pr in (0.0,) + tuple(preempt_rates):
+        cell = {"preempt_rate": pr}
+        for label, kw in (
+                ("naive", dict(preempt_requeue="naive", shedding=False)),
+                ("replan_shed", dict(preempt_requeue="replan",
+                                     shedding=True))):
+            res = run_fleet_sim(SimConfig(preempt_rate=pr, **kw, **common))
+            rec = _cell_record("variable+batching", PREEMPT["rate"], res)
+            del rec["per_class"]
+            rec["sla_misses"] = rec["violations"] + rec["rejected"]
+            cell[label] = rec
+        cell["p99_improvement"] = (cell["naive"]["p99_latency"]
+                                   - cell["replan_shed"]["p99_latency"])
+        # the acceptance metric: p99 + SLA violations among SERVED
+        # requests (a shed request is refused up front, not served late)
+        cell["replan_beats_naive"] = (
+            cell["replan_shed"]["p99_latency"]
+            < cell["naive"]["p99_latency"]
+            and cell["replan_shed"]["violations"]
+            <= cell["naive"]["violations"])
+        # the strict variant charges every refusal as a miss
+        # (sla_misses = violations + rejected), so shedding can never
+        # win by hiding traffic — read both columns
+        cell["replan_beats_naive_strict"] = (
+            cell["replan_shed"]["p99_latency"]
+            < cell["naive"]["p99_latency"]
+            and cell["replan_shed"]["sla_misses"]
+            <= cell["naive"]["sla_misses"])
+        out["cells"].append(cell)
+    return out
+
+
 def sample_decision(seed=0):
     """One audited PlanDecision on the Table-4 reference device — the
     unified-planner protocol record (JSON-replayable; drift in the
@@ -127,6 +193,11 @@ def bench(smoke=False, seed=0):
         seed=seed, duration=SMOKE_DURATION * 2 if smoke else
         HETERO["duration"],
         period_s=SMOKE_DURATION * 2 if smoke else HETERO["period_s"])
+    pre = preemption_comparison(
+        seed=seed,
+        duration=SMOKE_DURATION * 2 if smoke else PREEMPT["duration"],
+        period_s=SMOKE_DURATION * 2 if smoke else PREEMPT["period_s"],
+        preempt_rates=(0.05,) if smoke else PREEMPT["preempt_rates"])
     return {
         "planner_sample": sample_decision(seed=seed),
         "bench": "fleet_sim_sweep",
@@ -143,6 +214,7 @@ def bench(smoke=False, seed=0):
                    "peak_gpus", "utilization")}
                  for cell in grid],
         "hetero": het,
+        "preemption": pre,
     }
 
 
@@ -166,6 +238,15 @@ def run():
         f"p99_edf={het['edf']['p99_latency']:.2f}s "
         f"viol_fifo={het['fifo']['violations']} "
         f"viol_edf={het['edf']['violations']}"))
+    for cell in payload["preemption"]["cells"]:
+        rows.append((
+            f"fleet_sim/preempt/rate_{cell['preempt_rate']:g}", dt,
+            f"p99_naive={cell['naive']['p99_latency']:.2f}s "
+            f"p99_replan={cell['replan_shed']['p99_latency']:.2f}s "
+            f"viol_naive={cell['naive']['violations']} "
+            f"viol_replan={cell['replan_shed']['violations']} "
+            f"rej={cell['replan_shed']['rejected']} "
+            f"killed={cell['replan_shed']['killed_jobs']}"))
     return rows
 
 
@@ -193,6 +274,15 @@ def main():
           f"(edf_beats_fifo={het['edf_beats_fifo']}); "
           f"violations fifo={het['fifo']['violations']} "
           f"edf={het['edf']['violations']}")
+    for cell in payload["preemption"]["cells"]:
+        n, r = cell["naive"], cell["replan_shed"]
+        print(f"preempt rate={cell['preempt_rate']:g}/GPU/s "
+              f"(killed {n['killed_jobs']}/{r['killed_jobs']} jobs): "
+              f"p99 naive={n['p99_latency']:.2f}s "
+              f"replan+shed={r['p99_latency']:.2f}s; "
+              f"viol naive={n['violations']} replan+shed={r['violations']} "
+              f"(+{r['rejected']} shed) "
+              f"replan_beats_naive={cell['replan_beats_naive']}")
 
 
 if __name__ == "__main__":

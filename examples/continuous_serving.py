@@ -11,7 +11,8 @@ Everything imports from the ``repro.api`` facade; the prologue also
 shows the unified planner protocol directly — one PlanRequest in, one
 explained + replayable PlanDecision out.
 
-    PYTHONPATH=src python examples/continuous_serving.py [--smoke]
+    PYTHONPATH=src python examples/continuous_serving.py [--smoke] \\
+        [--preempt-rate R]
 
 The second act reruns the same day on the heterogeneous 2-class pool
 (base + 0.5x preemptible spot) with EDF dispatch: jobs route to the
@@ -19,6 +20,18 @@ cheapest GPU class that still meets their deadline, and the
 deadline-aware allocator grows the RESERVED class for demand that spot
 is too slow to serve — the starvation caveat the old spot-first-only
 scaling had at spot_ratio=0.5 (docs/capacity.md), now fixed.
+
+With ``--preempt-rate R`` (reclaims/s per provisioned spot GPU, e.g.
+0.05) a third act makes the spot slice actually preemptible
+(docs/preemption.md): the provider reclaims GPUs mid-job, and the demo
+compares kill-and-naive-requeue against replan-on-preemption (killed
+jobs re-enter the planner carrying elapsed-time credit under their
+tightened deadline) + admission-level load shedding, on identical
+capacity.  On the full stressed day (the BENCH_fleet_sim.json cell,
+pinned by tests/test_preemption.py) EDF + shedding + replan wins p99
+AND violations at equal provisioned cost; the shorter --smoke day
+reports its own (p99-only) outcome honestly — see docs/preemption.md
+on the regime dependence.
 """
 import argparse
 
@@ -52,6 +65,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="short CI run (~1 compressed day in <15 s)")
+    ap.add_argument("--preempt-rate", type=float, default=0.0,
+                    help="spot reclaims/s per provisioned spot GPU; > 0 "
+                         "adds the preemption act (try 0.05)")
     args = ap.parse_args()
 
     planner_prologue()
@@ -106,6 +122,8 @@ def main():
           f"inside SLA-bounded windows instead of over a fleet snapshot)")
 
     hetero_day(cfg)
+    if args.preempt_rate > 0:
+        preemption_day(cfg, args.preempt_rate)
 
 
 def hetero_day(base_cfg: SimConfig):
@@ -146,6 +164,62 @@ def hetero_day(base_cfg: SimConfig):
           f"{res.total_gpu_cost:.1f} cost units "
           f"(homogeneous run above pays 1.0/GPU-s; spot discount bought "
           f"{res.total_gpu_seconds - res.total_gpu_cost:.1f} units)")
+
+
+def preemption_day(base_cfg: SimConfig, preempt_rate: float):
+    """Same diurnal day on a spot-heavy pool, but the spot slice is now
+    ACTUALLY preemptible: the provider reclaims GPUs mid-job at
+    ``preempt_rate`` per provisioned spot GPU per second.
+
+    Two runs on identical capacity + autoscaler config (equal
+    provisioned cost): kill-and-naive-requeue (killed jobs restart from
+    scratch with their original split) vs the full treatment — EDF
+    dispatch + replan-on-preemption (killed members re-enter
+    ``planner.replan_preempted`` carrying elapsed-time credit under
+    their tightened remaining deadline) + admission-level load shedding
+    (the planner's pressure valve refuses requests with no winnable
+    plan instead of serving them late).  See docs/preemption.md.
+
+    The act runs the STRESSED day the bench cells pin (<= 300 s
+    compressed period): recovery policy matters exactly when the
+    autoscaler cannot keep up with the diurnal swing; over a long calm
+    day every requeue mode converges (docs/preemption.md discusses the
+    regime dependence).
+    """
+    import dataclasses
+    cap = table4_capacity(base_count=8, spot_count=16, base_max=16,
+                          spot_max=48)
+    day_s = min(base_cfg.duration, 300.0)
+    print(f"\n== spot preemption (reclaim rate {preempt_rate:g}/GPU/s, "
+          "equal provisioned cost) ==")
+    results = {}
+    for label, kw in (("naive requeue", dict(preempt_requeue="naive",
+                                             shedding=False)),
+                      ("replan+shed", dict(preempt_requeue="replan",
+                                           shedding=True))):
+        cfg = dataclasses.replace(base_cfg, capacity=cap, dispatch="edf",
+                                  duration=day_s, diurnal_period_s=day_s,
+                                  preempt_rate=preempt_rate, **kw)
+        res = run_fleet_sim(cfg)
+        results[label] = res
+        served = len(res.completed)
+        print(f"  {label:14s} reclaimed={res.preempted_gpus:3d} GPUs "
+              f"killed={res.killed_jobs:3d} jobs replans={res.replans:3d} "
+              f"| served={served} viol={res.violations} "
+              f"shed={res.rejected} p99={res.latency_percentile(99):.2f}s "
+              f"cost={res.total_gpu_cost:.0f}")
+    naive, treated = results["naive requeue"], results["replan+shed"]
+    wins = (treated.latency_percentile(99) < naive.latency_percentile(99)
+            and treated.violations <= naive.violations)
+    print(f"replan+shed vs naive requeue: p99 "
+          f"{treated.latency_percentile(99):.2f}s vs "
+          f"{naive.latency_percentile(99):.2f}s, violations "
+          f"{treated.violations} vs {naive.violations} "
+          f"(wins both: {wins}; killed work re-enters with its banked "
+          "iterations instead of restarting, and hopeless arrivals are "
+          "refused up front instead of clogging the queue — the full "
+          "bench cell in BENCH_fleet_sim.json runs the complete day, "
+          "where the win is pinned by tests/test_preemption.py)")
 
 
 if __name__ == "__main__":

@@ -5,39 +5,54 @@ stop for one worker mid-run; the monitor detects it, the elastic planner
 shrinks the mesh (TP degree preserved, data parallelism reduced), and
 training resumes from the latest atomic checkpoint with identical state.
 
-    PYTHONPATH=src python examples/elastic_restart.py
+The coordinator-side pieces (heartbeats, straggler detection, the
+elastic mesh plan) come from the ``repro.api`` facade like the other
+examples; only the jax training loop itself is a direct
+``repro.train`` import.
+
+    PYTHONPATH=src python examples/elastic_restart.py [--smoke]
 """
+import argparse
 import tempfile
 
-import numpy as np
-import jax
-
-from repro.configs import reduced_config
-from repro.data.pipeline import DataConfig
-from repro.train import checkpoint as ckpt
-from repro.train.fault_tolerance import (
+from repro.api import (
     HeartbeatMonitor,
     StragglerDetector,
     plan_elastic_mesh,
 )
+from repro.configs import reduced_config
+from repro.data.pipeline import DataConfig
+from repro.train import checkpoint as ckpt
 from repro.train.optimizer import AdamWConfig
 from repro.train.train_loop import TrainConfig, TrainLoop
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI run: fewer steps each phase")
+    args = ap.parse_args()
+    # smoke keeps every phase boundary (checkpoint before failure,
+    # failure after a checkpoint exists, resume past it, w3's heartbeat
+    # aging past the 30 s timeout) at ~half scale
+    steps1, fail_at, ckpt_every, steps2, age_s = \
+        (12, 7, 5, 6, 28.0) if args.smoke else (25, 12, 10, 15, 20.0)
+
     cfg = reduced_config("smollm-135m")
     dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=4)
     d = tempfile.mkdtemp(prefix="elastic_")
     tc = TrainConfig(optimizer=AdamWConfig(peak_lr=1e-3, warmup_steps=5,
                                            total_steps=100),
-                     checkpoint_dir=d, checkpoint_every=10, log_every=10)
+                     checkpoint_dir=d, checkpoint_every=ckpt_every,
+                     log_every=ckpt_every)
 
     clock = [0.0]
     mon = HeartbeatMonitor(["w0", "w1", "w2", "w3"], timeout_s=30,
                            clock=lambda: clock[0])
     det = StragglerDetector(factor=1.5)
 
-    print("phase 1: 4 workers, training to step 25 (checkpoint every 10)")
+    print(f"phase 1: 4 workers, training to step {steps1} "
+          f"(checkpoint every {ckpt_every})")
     loop = TrainLoop(cfg, dc, tc)
 
     def on_step(step, params, opt, metrics):
@@ -45,14 +60,14 @@ def main():
         for w in ("w0", "w1", "w2"):
             mon.beat(w)
             det.record(w, 1.0)
-        if step < 12:            # w3 dies at step 12
+        if step < fail_at:       # w3 dies mid-run
             mon.beat("w3")
             det.record("w3", 1.0 if step < 4 else 2.4)  # straggles first
 
-    loop.run(25, on_step=on_step)
+    loop.run(steps1, on_step=on_step)
     print(f"  stragglers observed before failure: {det.stragglers()}")
 
-    clock[0] += 20.0             # w3's heartbeat ages out (w0-2 still fresh)
+    clock[0] += age_s            # w3's heartbeat ages out (w0-2 still fresh)
     dead = mon.check()
     print(f"phase 2: failure detected: dead={dead} alive={mon.alive}")
     plan = plan_elastic_mesh(len(mon.alive) * 64, model_parallel=16,
@@ -65,7 +80,7 @@ def main():
     params, opt, start = loop2.init_or_resume()
     print(f"  resumed at step {start} "
           f"(latest on disk: {ckpt.latest_step(d)})")
-    _, _, hist = loop2.run(15)
+    _, _, hist = loop2.run(steps2)
     print(f"  continued to step {hist[-1]['step']}, "
           f"loss={hist[-1]['loss']:.4f}")
     print("OK: failure -> detection -> re-mesh plan -> exact resume.")

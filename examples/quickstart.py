@@ -1,19 +1,30 @@
-"""Quickstart: the paper's split-serving system in ~60 lines.
+"""Quickstart: the paper's split-serving system in ~70 lines.
 
 Builds the reduced latent-diffusion model, registers three simulated
-mobile devices of different speeds, lets the scheduler solve for each
-device's minimum cloud iterations (quantized to the n_step grid), runs
-the cloud segments batched per group, ships the (latent, context)
-boundary, and finishes each job "on the device".
+mobile devices of different speeds, asks the unified planner
+(``repro.api``) what each device's minimum cloud share is (quantized to
+the n_step grid), runs the cloud segments batched per group, ships the
+(latent, context) boundary, and finishes each job "on the device".
 
-    PYTHONPATH=src python examples/quickstart.py
+Scheduling goes through the ``repro.api`` facade like the other
+examples — the engine's ``assign``/``plan`` delegate to the same
+``Planner`` the decision printed below comes from.
+
+    PYTHONPATH=src python examples/quickstart.py [--smoke]
 """
+import argparse
+
 import jax
 import numpy as np
 
+from repro.api import (
+    CostParams,
+    DeviceProfile,
+    PlanRequest,
+    Planner,
+    e2e_latency,
+)
 from repro.configs import stable_diffusion_v1
-from repro.core.cost_model import CostParams, e2e_latency
-from repro.core.telemetry import DeviceProfile
 from repro.core.transport import LOCAL_LINK
 from repro.models import diffusion
 from repro.serving.engine import (
@@ -24,6 +35,11 @@ from repro.serving.engine import (
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI run: fewer devices, one less compile")
+    args = ap.parse_args()
+
     cfg = stable_diffusion_v1.reduced()
     print(f"model: {cfg.name}  n_total={cfg.n_total_iterations} "
           f"split_stride={cfg.split_stride}")
@@ -38,6 +54,19 @@ def main():
         DeviceProfile("m2-ipad", r_dev=3.07, rtt=0.05),
         DeviceProfile("workstation", r_dev=20.0, rtt=0.01),
     ]
+    if args.smoke:
+        fleet = fleet[:2]       # one batchable group, one fewer compile
+
+    # the decision protocol behind engine.assign: one request in, one
+    # explained decision out — the engine's scheduling surface IS a
+    # repro.api.Planner (policy "variable" sized at the batched rate)
+    assert isinstance(engine.planner, Planner)
+    decision = engine.planner.plan(PlanRequest(device=fleet[0],
+                                               request_id="quickstart"))
+    print("== planner decision for the slowest device ==")
+    print(decision.explain())
+    assert decision.n_final == engine.assign(fleet[0])
+
     toks = np.zeros((1, cfg.text_len), np.int32)
     reqs = [Request(d.device_id, d, toks, toks) for d in fleet]
     results = engine.serve(reqs, seed=0)

@@ -21,6 +21,7 @@ against this surface, so drift here breaks the build, not users.
 from repro.core.capacity import (  # noqa: F401
     CloudCapacity,
     GpuClass,
+    preemption_discount,
     reference_params,
 )
 from repro.core.cost_model import (  # noqa: F401
@@ -35,12 +36,14 @@ from repro.core.cost_model import (  # noqa: F401
 from repro.core.planner import (  # noqa: F401
     JobSpec,
     NetworkProfile,
+    PLAN_ACTIONS,
     PlanDecision,
     PlanRequest,
     Planner,
     POLICIES,
     PoolSnapshot,
     RoutePolicy,
+    ShedPolicy,
     make_scheduler,
     plan,
     replay,
@@ -68,20 +71,28 @@ from repro.serving.simulator import (  # noqa: F401
     table4_capacity,
     table4_fleet,
 )
+from repro.train.fault_tolerance import (  # noqa: F401
+    HeartbeatMonitor,
+    StragglerDetector,
+    plan_elastic_mesh,
+)
 
 __all__ = [
     # planner protocol
-    "JobSpec", "NetworkProfile", "PlanDecision", "PlanRequest", "Planner",
-    "PoolSnapshot", "RoutePolicy", "POLICIES", "make_scheduler", "plan",
-    "replay",
+    "JobSpec", "NetworkProfile", "PLAN_ACTIONS", "PlanDecision",
+    "PlanRequest", "Planner", "PoolSnapshot", "RoutePolicy", "ShedPolicy",
+    "POLICIES", "make_scheduler", "plan", "replay",
     # cost / capacity model
     "BatchModel", "CloudCapacity", "CostParams", "GpuClass", "Assignment",
     "cloud_gpu_time", "e2e_latency", "fit_batch_model", "quantize_step",
-    "solve_n_cloud", "reference_params", "allocate_gpus",
-    "allocate_gpus_heterogeneous", "cheapest_feasible_class",
-    "deadline_floors",
+    "solve_n_cloud", "reference_params", "preemption_discount",
+    "allocate_gpus", "allocate_gpus_heterogeneous",
+    "cheapest_feasible_class", "deadline_floors",
     # fleets + serving entry points
     "DeviceProfile", "generate_fleet", "FleetSimResult", "SimConfig",
     "run_fleet_sim", "CALIBRATED", "fleet_sim_table4", "run_table4",
     "table4_capacity", "table4_fleet",
+    # coordinator-side fault tolerance (jax-free; the training loop
+    # itself stays a direct repro.train import)
+    "HeartbeatMonitor", "StragglerDetector", "plan_elastic_mesh",
 ]

@@ -26,6 +26,12 @@ exactly to the scalar plan when there is a single class.
 Calibration: ``CloudCapacity.from_roofline`` consumes the per-hardware
 ``r_cloud_est`` records that ``roofline.analysis`` / ``launch.dryrun``
 emit, replacing hand calibration of per-class rates.
+
+Preemption (docs/preemption.md): preemptible capacity can be reclaimed
+mid-job by the provider.  ``preemption_discount`` models the resulting
+effective-throughput loss per spot GPU; ``supply``/``plan_counts``
+accept per-class ``discounts`` so the §4.5 plan provisions extra spot
+GPUs to cover expected reclaim — the preemption-aware headroom.
 """
 from __future__ import annotations
 
@@ -104,12 +110,20 @@ class CloudCapacity:
     def total_count(self) -> int:
         return sum(c.count for c in self.classes)
 
-    def supply(self, counts: Optional[Mapping[str, int]] = None) -> float:
+    def supply(self, counts: Optional[Mapping[str, int]] = None,
+               discounts: Optional[Mapping[str, float]] = None) -> float:
         """Aggregate iteration throughput (its/s) at ``counts`` (default:
-        the provisioned counts)."""
+        the provisioned counts).  ``discounts`` multiplies each class's
+        rate by an effective-throughput factor (``preemption_discount``
+        for spot classes under reclaim); absent/1.0 entries leave the
+        rate bit-exact."""
         if counts is None:
-            return sum(c.r_cloud * c.count for c in self.classes)
-        return sum(c.r_cloud * counts.get(c.name, 0) for c in self.classes)
+            counts = {c.name: c.count for c in self.classes}
+        if discounts is None:
+            return sum(c.r_cloud * counts.get(c.name, 0)
+                       for c in self.classes)
+        return sum(c.r_cloud * discounts.get(c.name, 1.0)
+                   * counts.get(c.name, 0) for c in self.classes)
 
     # -- orderings ---------------------------------------------------------
     def cheapest_first(self) -> List[GpuClass]:
@@ -136,7 +150,8 @@ class CloudCapacity:
     # -- §4.5 per-class planning -------------------------------------------
     def plan_counts(self, needed_supply: float,
                     current: Mapping[str, int],
-                    floors: Optional[Mapping[str, int]] = None
+                    floors: Optional[Mapping[str, int]] = None,
+                    discounts: Optional[Mapping[str, float]] = None
                     ) -> Dict[str, int]:
         """Per-class GPU targets meeting ``needed_supply`` its/s from
         ``current`` counts, growing spot-first / shrinking spot-first.
@@ -147,17 +162,26 @@ class CloudCapacity:
         see ``scheduler.deadline_floors``).  Growth still lands on spot
         first; release never drops a class below its floor.
 
+        ``discounts`` maps class name -> effective-throughput multiplier
+        (``preemption_discount``): a preemptible class under reclaim
+        supplies less useful throughput per provisioned GPU, so meeting
+        the same ``needed_supply`` provisions MORE spot GPUs — the
+        preemption-aware headroom.  Absent/1.0 entries are bit-exact
+        no-ops, so the no-preemption plan is unchanged.
+
         Reduces exactly to the scalar plan for a homogeneous pool:
         target = clamp(ceil(needed_supply / r_cloud), min, max).
         """
         floors = floors or {}
+        rate = {c.name: c.r_cloud * (discounts or {}).get(c.name, 1.0)
+                for c in self.classes}
         lo = {c.name: min(max(c.min_count, floors.get(c.name, 0)),
                           c.max_count)
               for c in self.classes}
         targets = {c.name: min(max(current.get(c.name, 0), lo[c.name]),
                                c.max_count)
                    for c in self.classes}
-        supply = self.supply(targets)
+        supply = self.supply(targets, discounts=discounts)
         # the 1e-9 guards absorb float wobble in gap/rate so a demand of
         # exactly k GPUs never rounds to k+1 (or releases one too many)
         if supply < needed_supply:
@@ -165,11 +189,11 @@ class CloudCapacity:
                 gap = needed_supply - supply
                 if gap <= 0:
                     break
-                add = min(int(math.ceil(gap / c.r_cloud - 1e-9)),
+                add = min(int(math.ceil(gap / rate[c.name] - 1e-9)),
                           c.max_count - targets[c.name])
                 add = max(0, add)
                 targets[c.name] += add
-                supply += add * c.r_cloud
+                supply += add * rate[c.name]
         elif supply > needed_supply:
             for c in self.release_order():
                 excess = supply - needed_supply
@@ -177,11 +201,11 @@ class CloudCapacity:
                     break
                 # keep (count - drop) * r >= needed share: drop whole GPUs
                 # only while the remaining supply still covers the need
-                drop = min(int(excess / c.r_cloud + 1e-9),
+                drop = min(int(excess / rate[c.name] + 1e-9),
                            targets[c.name] - lo[c.name])
                 drop = max(0, drop)
                 targets[c.name] -= drop
-                supply -= drop * c.r_cloud
+                supply -= drop * rate[c.name]
         return targets
 
     # -- serialization -----------------------------------------------------
@@ -271,3 +295,32 @@ def reference_params(params, capacity: CloudCapacity):
     reference rate — the bridge that keeps every closed-form solve
     working on a heterogeneous pool."""
     return dataclasses.replace(params, r_cloud=capacity.reference_rate())
+
+
+def preemption_discount(preempt_rate: float, provision_delay_s: float = 0.0,
+                        job_s: float = 0.0,
+                        restart_loss: float = 0.5) -> float:
+    """Expected useful-throughput multiplier for ONE preemptible GPU
+    under Poisson spot reclaim at ``preempt_rate`` (reclaims/s per
+    provisioned GPU).
+
+    Renewal argument: between reclaims a GPU delivers 1/preempt_rate
+    seconds of work on average; each reclaim then costs
+    ``provision_delay_s`` of absent capacity (until the autoscaler's
+    replacement comes online) plus ``restart_loss * job_s`` of lost
+    progress on the job it killed — 0.5 jobs for restart-from-scratch
+    (naive requeue kills, on average, a half-done job), ~0 when replans
+    carry elapsed-time credit (``Planner.replan_preempted``).  Useful
+    fraction of a renewal cycle:
+
+        discount = (1/rate) / (1/rate + delay + loss*job_s)
+                 = 1 / (1 + rate * (delay + loss*job_s))
+
+    ``preempt_rate <= 0`` returns exactly 1.0 — the no-preemption
+    anchor (``plan_counts``/``deadline_floors`` stay bit-identical).
+    """
+    if preempt_rate <= 0:
+        return 1.0
+    overhead = preempt_rate * (max(0.0, provision_delay_s)
+                               + max(0.0, restart_loss) * max(0.0, job_s))
+    return 1.0 / (1.0 + overhead)

@@ -12,7 +12,7 @@ decision was assembled ad hoc by every consumer from scattered pieces
     PlanRequest  (DeviceProfile + NetworkProfile + job context)
         -> Planner.plan(): a composable policy pipeline
            split solve -> quantize -> class routing -> batching
-           admission -> SLA adaptation
+           admission -> load shedding -> SLA adaptation
         -> PlanDecision (JSON-serializable, with an explain() trace
            naming the policy that set each field, and deterministic
            replay from the serialized form)
@@ -148,11 +148,13 @@ class JobSpec:
 @dataclasses.dataclass(frozen=True)
 class PlanRequest:
     """One request in: who is asking (device), over what network, and
-    how backed up the cloud currently looks (the §4.4 online admission
-    honesty term)."""
+    how backed up the cloud currently looks (``queue_delay_hint`` — the
+    §4.4 online admission honesty term — plus ``utilization_hint``, the
+    observed pool utilization the load-shedding stage watches)."""
     device: DeviceProfile
     network: Optional[NetworkProfile] = None
     queue_delay_hint: float = 0.0
+    utilization_hint: float = 0.0
     request_id: str = ""
 
     def profile(self) -> DeviceProfile:
@@ -169,6 +171,7 @@ class PlanRequest:
             "network": dataclasses.asdict(self.network)
             if self.network else None,
             "queue_delay_hint": self.queue_delay_hint,
+            "utilization_hint": self.utilization_hint,
             "request_id": self.request_id,
         }
 
@@ -179,6 +182,7 @@ class PlanRequest:
             network=NetworkProfile(**d["network"]) if d.get("network")
             else None,
             queue_delay_hint=d.get("queue_delay_hint", 0.0),
+            utilization_hint=d.get("utilization_hint", 0.0),
             request_id=d.get("request_id", ""),
         )
 
@@ -208,6 +212,12 @@ class PlanDecision:
     batch_reason: str
     t_lim: float                  # effective SLA this was decided under
     trace: List[Dict[str, Any]]   # [{"field", "value", "policy", "detail"}]
+    #: admission verdict of the load-shedding stage: "admit" (serve the
+    #: plan as solved), "degrade-to-local" (pressure: n_final forced to
+    #: 0, the device runs everything), or "reject" (pressure AND no
+    #: winnable plan — not even pure-local meets the deadline)
+    action: str = "admit"
+    shed_reason: str = ""
 
     #: the live Assignment the scheduler produced (not serialized; the
     #: fleet simulator keeps it so the migration is object-identical)
@@ -347,6 +357,47 @@ class RoutePolicy:
 
 
 # --------------------------------------------------------------------------
+# Admission-level load shedding (the pipeline's pressure valve)
+# --------------------------------------------------------------------------
+#: The three load-shedding verdicts, in decreasing order of service.
+PLAN_ACTIONS = ("admit", "degrade-to-local", "reject")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShedPolicy:
+    """When does the admission stage start shedding load?
+
+    Pressure is declared when the caller-supplied hints cross either
+    threshold: ``queue_delay_hint > queue_high * t_lim`` (the cloud
+    backlog alone would eat that fraction of the latency budget) or
+    ``utilization_hint >= util_high`` (the pool is saturated; queueing
+    theory says delay is about to explode).  Under pressure, a request
+    whose queued cloud plan still fits ``t_lim`` is admitted; one whose
+    cloud plan would violate DEGRADES to pure-local service if the
+    device can finish within ``degrade_ceil * t_lim`` (§7's graceful
+    degradation: serve late locally, free the cloud); only a request
+    with no winnable plan either way is rejected.  A request whose
+    pure-local latency meets its deadline is therefore NEVER rejected
+    (``degrade_ceil >= 1``; property-tested:
+    ``test_shedding_never_rejects_local_feasible_*``).
+    """
+    queue_high: float = 0.6       # fraction of t_lim the queue may eat
+    util_high: float = 0.95       # utilization at/above this is pressure
+    degrade_ceil: float = 1.5     # local service may take this x t_lim
+
+    def __post_init__(self):
+        if self.queue_high <= 0 or not (0.0 < self.util_high <= 1.0 + 1e-9):
+            raise ValueError("need queue_high > 0 and 0 < util_high <= 1")
+        if self.degrade_ceil < 1.0:
+            raise ValueError("degrade_ceil must be >= 1.0 (otherwise a "
+                             "locally-FEASIBLE request could be rejected)")
+
+    def pressured(self, request: "PlanRequest", t_lim: float) -> bool:
+        return (request.queue_delay_hint > self.queue_high * t_lim
+                or request.utilization_hint >= self.util_high)
+
+
+# --------------------------------------------------------------------------
 # The planner
 # --------------------------------------------------------------------------
 def _t(field: str, value, policy: str, detail: str = "") -> Dict[str, Any]:
@@ -366,7 +417,10 @@ class Planner:
                           (advisory; the queue-aware ``route_policy`` is
                           what a dispatcher consults at submit time)
     4. batching         — ``admission.BatchingAdmission`` (§4.4 online)
-    5. SLA adaptation   — the effective t_lim (``set_t_lim`` is the
+    5. load shedding    — ``ShedPolicy`` pressure valve: admit /
+                          degrade-to-local / reject (``decision.action``;
+                          no-op when ``shed_policy`` is None)
+    6. SLA adaptation   — the effective t_lim (``set_t_lim`` is the
                           hook the §7 adaptive controller drives)
 
     The scheduler and admission objects are owned by the planner and
@@ -394,7 +448,8 @@ class Planner:
                  dispatch: str = "fifo",
                  solve_c_batch: float = 1.0,
                  audit: bool = True,
-                 sla_source: str = "fixed"):
+                 sla_source: str = "fixed",
+                 shed_policy: Optional[ShedPolicy] = None):
         if params is None:
             if job is None:
                 raise ValueError("need params or a JobSpec")
@@ -423,6 +478,7 @@ class Planner:
         self.solve_c_batch = solve_c_batch
         self.audit = audit
         self._sla_source = sla_source
+        self.shed_policy = shed_policy
         self.scheduler = make_scheduler(
             self.policy, params, worst_r_dev=worst_r_dev,
             worst_rtt=worst_rtt, batch_size=self.batch_size,
@@ -463,7 +519,9 @@ class Planner:
             worst_rtt=d.get("worst_rtt", 0.3),
             dispatch=d.get("dispatch", "fifo"),
             solve_c_batch=d.get("solve_c_batch", 1.0),
-            sla_source=d.get("sla_source", "fixed"))
+            sla_source=d.get("sla_source", "fixed"),
+            shed_policy=ShedPolicy(**d["shed_policy"])
+            if d.get("shed_policy") else None)
 
     def config_json(self) -> Dict[str, Any]:
         """Everything needed to rebuild this planner deterministically
@@ -483,6 +541,8 @@ class Planner:
             "solve_c_batch": self.solve_c_batch,
             "capacity": self.capacity.to_json() if self.capacity else None,
             "sla_source": self._sla_source,
+            "shed_policy": dataclasses.asdict(self.shed_policy)
+            if self.shed_policy else None,
         }
         return self._config_cache
 
@@ -579,7 +639,49 @@ class Planner:
                 trace.append(_t("batch_admit", False, "batching:none",
                                 reason))
 
-        # 5. SLA adaptation: record the target this decision ran under
+        # 5. admission-level load shedding: under queue/utilization
+        # pressure, cloud-optional requests degrade to pure-local
+        # service (saving the cloud work entirely) and only requests
+        # with NO winnable plan are rejected.  Runs in non-audit mode
+        # too — it is value-bearing, not advisory.
+        action, shed_reason = "admit", ""
+        if self.shed_policy is not None and a.n_final > 0 \
+                and self.shed_policy.pressured(request, p.t_lim):
+            local_lat = e2e_latency(0, prof.r_dev, p, prof.rtt,
+                                    c_batch=1.0)
+            queued_lat = a.latency + request.queue_delay_hint
+            ceil = self.shed_policy.degrade_ceil * p.t_lim
+            hint = (f"queue_hint={request.queue_delay_hint:.3g}s, "
+                    f"util_hint={request.utilization_hint:.2f}")
+            if queued_lat <= p.t_lim + 1e-9:
+                shed_reason = (f"pressure ({hint}) but the queued cloud "
+                               f"plan still fits: {queued_lat:.4g} <= "
+                               f"{p.t_lim:.4g}")
+            elif local_lat <= ceil + 1e-9:
+                action = "degrade-to-local"
+                shed_reason = (f"pressure ({hint}); queued cloud plan "
+                               f"misses t_lim ({queued_lat:.4g}s) but the "
+                               f"device finishes in {local_lat:.4g}s <= "
+                               f"{ceil:.4g}s — §7 graceful degradation")
+                a = dataclasses.replace(
+                    a, n_final=0, latency=local_lat,
+                    feasible=local_lat <= p.t_lim + 1e-9,
+                    batched=False, batch_factor=1.0)
+                gpu_time, gpu_class, cloud_rate = 0.0, None, p.r_cloud
+                admit, max_wait = False, 0.0
+                reason = "shed: degraded to local; nothing to batch"
+            else:
+                action = "reject"
+                shed_reason = (f"pressure ({hint}) and no winnable plan: "
+                               f"queued cloud {queued_lat:.4g}s misses "
+                               f"t_lim and local {local_lat:.4g}s > "
+                               f"degrade ceiling {ceil:.4g}s")
+        if audit:
+            trace.append(_t("action", action,
+                            "shed:pressure-valve" if self.shed_policy
+                            else "shed:none", shed_reason))
+
+        # 6. SLA adaptation: record the target this decision ran under
         if audit:
             trace.append(_t("t_lim", p.t_lim, f"sla:{self._sla_source}",
                             "set_t_lim() is the §7 adaptive controller "
@@ -593,7 +695,45 @@ class Planner:
             cloud_rate=cloud_rate, batch_admit=admit,
             batch_max_wait=max_wait, batch_latency=batch_lat,
             batch_solo_latency=solo_lat, batch_reason=reason,
-            t_lim=p.t_lim, trace=trace, _assignment=a)
+            t_lim=p.t_lim, trace=trace, action=action,
+            shed_reason=shed_reason, _assignment=a)
+
+    # -- replan-on-preemption ------------------------------------------------
+    def replan_preempted(self, request: PlanRequest, n_done: int,
+                         time_left: float) -> PlanDecision:
+        """Re-plan a request whose cloud job was killed by a spot
+        reclaim, after ``n_done`` of its cloud iterations completed and
+        with ``time_left`` seconds of its original e2e deadline
+        remaining.
+
+        Elapsed-time credit + tightened deadline: the effective job is
+        the original one minus the iterations already banked
+        (``n_total' = n_total - n_done``) under the remaining budget
+        (``t_lim' = time_left``), so the SAME pipeline solves the
+        remaining split — the decision's ``n_final`` is the ADDITIONAL
+        cloud iterations to run.  ``n_final == 0`` means the device can
+        finish the remainder locally within the budget; a non-positive
+        ``time_left`` degenerates to best-effort all-remaining-on-cloud
+        (``feasible=False``), mirroring ``solve_n_cloud`` saturating.
+
+        The decision embeds the EFFECTIVE planner config, so audited
+        replans stay deterministically replayable.  Shedding is not
+        applied here: an in-flight request is never rejected after
+        admission — re-admission only chooses where the remaining work
+        runs.
+        """
+        if n_done < 0:
+            raise ValueError(f"n_done must be >= 0, got {n_done}")
+        p_eff = dataclasses.replace(
+            self.p, n_total=max(0, self.p.n_total - n_done),
+            t_lim=time_left)
+        replanner = Planner(
+            p_eff, capacity=self.capacity, policy=self.policy,
+            batch_size=self.batch_size, batch_model=self.batch_model,
+            worst_r_dev=self.worst_r_dev, worst_rtt=self.worst_rtt,
+            dispatch=self.dispatch, solve_c_batch=self.solve_c_batch,
+            audit=self.audit, sla_source="replan:preemption")
+        return replanner.plan(request)
 
 
 # --------------------------------------------------------------------------

@@ -311,7 +311,8 @@ class HeteroAllocationPlan:
 
 def deadline_floors(demands, p: CostParams, capacity, horizon_s: float,
                     headroom: float = 1.0,
-                    c_batch: float = 1.0) -> Dict[str, int]:
+                    c_batch: float = 1.0,
+                    discounts=None) -> Dict[str, int]:
     """Deadline-aware per-class GPU floors (the docs/capacity.md caveat
     fix): demand that only fast classes can serve within ``p.t_lim``
     must be covered by those classes, so blind spot-first scaling cannot
@@ -322,6 +323,13 @@ def deadline_floors(demands, p: CostParams, capacity, horizon_s: float,
     ``c_batch`` is the slowdown jobs actually run at (pass the batch-b
     slowdown when the policy batches: a batched job holds a slow class
     even longer, which is precisely what saturates the reserved slice).
+
+    ``discounts`` (class name -> ``capacity.preemption_discount``)
+    makes the floors preemption-aware: feasibility and pledged supply
+    are judged at each class's EFFECTIVE rate, so a spot class under
+    heavy reclaim is treated as slower than its nameplate rate and
+    tight-deadline demand is pinned on reserved capacity.  Absent/1.0
+    entries are bit-exact no-ops.
 
     Each demand is charged to the SLOWEST class whose no-queue latency
     still meets the SLA (the cheapest-feasible dispatch boundary;
@@ -334,7 +342,9 @@ def deadline_floors(demands, p: CostParams, capacity, horizon_s: float,
     job), so for a homogeneous capacity every floor is zero and the
     plan is EXACTLY the legacy scalar plan — the golden-trace anchor.
     """
-    classes = sorted(capacity, key=lambda c: (-c.r_cloud, c.name))
+    eff = {c.name: c.r_cloud * (discounts or {}).get(c.name, 1.0)
+           for c in capacity}
+    classes = sorted(capacity, key=lambda c: (-eff[c.name], c.name))
     floors: Dict[str, int] = {c.name: 0 for c in classes}
     if len(classes) < 2:
         return floors
@@ -348,7 +358,7 @@ def deadline_floors(demands, p: CostParams, capacity, horizon_s: float,
         for i in range(len(classes) - 1, -1, -1):
             lat = e2e_latency(n_final, r_dev, p, t_network,
                               c_batch=c_batch,
-                              r_cloud=classes[i].r_cloud)
+                              r_cloud=eff[classes[i].name])
             if lat <= p.t_lim + 1e-9:
                 idx = i
                 break
@@ -358,10 +368,10 @@ def deadline_floors(demands, p: CostParams, capacity, horizon_s: float,
     for i, c in enumerate(classes[:-1]):     # slowest class: no floor
         need += need_rate[i]
         gap = need - pledged
-        floor = min(c.max_count, int(math.ceil(gap / c.r_cloud - 1e-9))) \
+        floor = min(c.max_count, int(math.ceil(gap / eff[c.name] - 1e-9))) \
             if gap > 1e-12 else 0
         floors[c.name] = max(0, floor)
-        pledged += floors[c.name] * c.r_cloud
+        pledged += floors[c.name] * eff[c.name]
         # demand a max_count-clamped class cannot cover must NOT spill
         # onto slower classes: they cannot meet its SLA, so pinning
         # them raises cost without reducing violations (the residual is
@@ -375,7 +385,8 @@ def allocate_gpus_heterogeneous(summary: ScheduleSummary, p: CostParams,
                                 horizon_s: float, headroom: float = 1.0,
                                 release_threshold: float = 0.5,
                                 demands=None,
-                                demand_c_batch: float = 1.0
+                                demand_c_batch: float = 1.0,
+                                rate_discounts=None
                                 ) -> HeteroAllocationPlan:
     """Class-aware §4.5 allocation: size the pool at the reference rate,
     then meet that supply with per-class counts via
@@ -387,6 +398,11 @@ def allocate_gpus_heterogeneous(summary: ScheduleSummary, p: CostParams,
     deadline-aware floors: per-class feasibility is considered BEFORE
     choosing which class to scale, so tight-deadline demand pins
     reserved capacity even while spot still has headroom.
+
+    ``rate_discounts`` (class name -> ``capacity.preemption_discount``)
+    makes the whole plan preemption-aware: ``plan_counts`` provisions
+    extra spot GPUs to cover expected reclaim loss and the deadline
+    floors judge spot feasibility at its effective (discounted) rate.
 
     For a homogeneous capacity this reduces EXACTLY to the scalar path:
     target = clamp(ceil(gpus_needed * headroom), min, max).
@@ -400,8 +416,10 @@ def allocate_gpus_heterogeneous(summary: ScheduleSummary, p: CostParams,
     want_ref = math.ceil(ref_plan.gpus_needed * headroom)
     needed_supply = want_ref * r_ref
     floors = (deadline_floors(demands, p, capacity, horizon_s,
-                              headroom=headroom, c_batch=demand_c_batch)
+                              headroom=headroom, c_batch=demand_c_batch,
+                              discounts=rate_discounts)
               if demands is not None else {})
-    targets = capacity.plan_counts(needed_supply, current, floors=floors)
+    targets = capacity.plan_counts(needed_supply, current, floors=floors,
+                                   discounts=rate_discounts)
     return HeteroAllocationPlan(targets=targets, reference=ref_plan,
                                 needed_supply=needed_supply, floors=floors)

@@ -36,6 +36,24 @@ simulator is bit-identical to the pre-capacity refactor: the golden
 trace and the Table-4 steady-state convergence are the regression
 anchors.
 
+Spot preemption (``preempt_rate`` / ``preempt_trace``, see
+docs/preemption.md): preemptible classes can LOSE GPUs mid-job — a
+Poisson reclaim process (or a scripted trace) takes idle spot GPUs
+first, then kills running jobs.  Killed jobs' members re-enter through
+``planner.replan_preempted`` carrying elapsed-time credit (iterations
+already banked) under their tightened remaining deadline
+(``preempt_requeue="replan"``), or are resubmitted whole with no credit
+(``"naive"``, the baseline).  The §4.5 re-plan sees preemption too:
+spot supply is discounted by ``capacity.preemption_discount`` so the
+autoscaler provisions preemption-aware headroom.  With the default
+``preempt_rate=0`` every path is bit-identical to the no-preemption
+simulator (the golden-trace anchor).
+
+Admission-level load shedding (``shedding=True``): the planner pipeline
+gains a pressure valve — under queue/utilization pressure,
+cloud-optional arrivals degrade to pure-local service and only requests
+with no winnable plan are rejected (``PlanDecision.action``).
+
 Event kinds (a single heapq drives everything):
 
   ARRIVAL      next request from the arrival process
@@ -45,6 +63,7 @@ Event kinds (a single heapq drives everything):
   AUTOSCALE    periodic §4.5 re-plan
   COMPLETE     device finished its local iterations + decode
   METRICS      periodic time-series snapshot
+  PREEMPT      spot reclaim: a preemptible pool loses GPUs
 """
 from __future__ import annotations
 
@@ -57,7 +76,12 @@ from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.capacity import CloudCapacity, GpuClass, reference_params
+from repro.core.capacity import (
+    CloudCapacity,
+    GpuClass,
+    preemption_discount,
+    reference_params,
+)
 from repro.core.cost_model import (
     BatchModel,
     CostParams,
@@ -69,6 +93,7 @@ from repro.core.planner import (
     Planner,
     PoolSnapshot,
     RoutePolicy,
+    ShedPolicy,
 )
 from repro.core.scheduler import (
     Assignment,
@@ -87,9 +112,11 @@ from repro.core.telemetry import (
 from repro.serving.simulator import CALIBRATED, table4_fleet
 
 # event kinds, in tie-break priority order at equal timestamps: capacity
-# comes online before jobs are dispatched, arrivals before window flushes
+# comes online before jobs are dispatched, arrivals before window
+# flushes.  PREEMPT is appended LAST so adding it cannot reorder any
+# pre-preemption event sequence (the golden-trace anchor).
 (EVT_CAPACITY, EVT_JOB_DONE, EVT_ARRIVAL, EVT_WINDOW, EVT_AUTOSCALE,
- EVT_COMPLETE, EVT_METRICS) = range(7)
+ EVT_COMPLETE, EVT_METRICS, EVT_PREEMPT) = range(8)
 # DISPATCH_MODES is canonical in core.planner (imported above) so the
 # planner and the dispatcher can never disagree on valid modes
 
@@ -145,6 +172,22 @@ class SimConfig:
     sla_ceil: float = 60.0
     sla_high_water: float = 0.85
     sla_low_water: float = 0.5
+    # spot preemption (docs/preemption.md).  preempt_rate is the Poisson
+    # reclaim hazard per provisioned preemptible GPU (reclaims/s/GPU);
+    # preempt_trace schedules scripted reclaims [(t, class_name, k), ...]
+    # on top.  0/None (default) disables preemption entirely — every
+    # code path is bit-identical to the pre-preemption simulator.
+    preempt_rate: float = 0.0
+    preempt_trace: Optional[List[Tuple[float, str, int]]] = None
+    #: what happens to a killed job's members: "replan" re-enters each
+    #: through planner.replan_preempted (elapsed-time credit + tightened
+    #: deadline), "naive" resubmits the whole job unchanged (full
+    #: restart — the baseline the bench compares against)
+    preempt_requeue: str = "replan"
+    # admission-level load shedding (planner pipeline stage 5)
+    shedding: bool = False
+    shed_queue_high: float = 0.6
+    shed_util_high: float = 0.95
     # telemetry
     metrics_interval_s: float = 5.0
 
@@ -167,10 +210,14 @@ class SimRequest:
     cloud_service: float = 0.0          # wall time of its (batched) job
     batched: bool = False
     batch_slowdown: float = 1.0         # c_batch(b) its job actually ran at
-    gpu_seconds: float = 0.0            # this request's share
-    gpu_class: str = ""                 # class its cloud job ran on
+    gpu_seconds: float = 0.0            # this request's share (all attempts)
+    gpu_class: str = ""                 # class its cloud job ran on (last)
     gpu_cost: float = 0.0               # gpu_seconds * class cost_weight
     cloud_rate: float = 0.0             # r_cloud of the executing class
+    n_credit: int = 0                   # cloud iterations banked by killed
+                                        # attempts (replan-on-preemption)
+    preemptions: int = 0                # times a spot reclaim killed its job
+    window_joined: float = 0.0          # when it joined its current window
 
 
 @dataclasses.dataclass(frozen=True)
@@ -192,17 +239,22 @@ class CompletedRequest:
     violated: bool
     gpu_class: str = ""
     gpu_cost: float = 0.0
+    preemptions: int = 0                # spot reclaims that killed its job
+    n_credit: int = 0                   # cloud iterations banked by replans
 
 
-@dataclasses.dataclass
-class _Job:
-    group: int
+@dataclasses.dataclass(eq=False)      # identity semantics: two jobs are
+class _Job:                           # never "equal", and kill/remove
+    group: int                        # must target THIS job object
     members: List[SimRequest]
     service: float                      # wall seconds on one GPU
     submitted: float
     deadline: float = math.inf          # cloud-side finish deadline (EDF key)
     gpu_class: str = ""
     started: float = -1.0
+    uid: int = 0                        # monotone submit ordinal
+    killed: bool = False                # set by a spot reclaim; its pending
+                                        # JOB_DONE event becomes a no-op
 
 
 @dataclasses.dataclass
@@ -249,6 +301,9 @@ class GpuPool:
         self.weighted_gpu_seconds = 0.0
         self.released_total = 0
         self.peak_capacity = self.capacity
+        self.running: List[_Job] = []   # jobs holding a GPU (kill targets)
+        self.reclaimed_total = 0        # GPUs lost to spot reclaim
+        self.killed_total = 0           # running jobs killed by reclaim
         self._busy_integral = 0.0
         self._cap_integral = 0.0
         self._last_t = 0.0
@@ -267,6 +322,7 @@ class GpuPool:
     def _start(self, now: float, job: _Job) -> float:
         self.busy += 1
         job.started = now
+        self.running.append(job)
         self.gpu_seconds += job.service
         self.weighted_gpu_seconds += job.service * self.cost_weight
         return now + job.service
@@ -327,10 +383,58 @@ class GpuPool:
         self._enqueue(job)
         return None
 
-    def job_done(self, now: float) -> List[Tuple[_Job, float]]:
+    def job_done(self, now: float,
+                 job: Optional[_Job] = None) -> List[Tuple[_Job, float]]:
         self._advance(now)
         self.busy -= 1
+        if job is not None:
+            self.running.remove(job)        # identity (eq=False on _Job)
         return self._drain(now)
+
+    # -- spot reclaim (docs/preemption.md) ---------------------------------
+    def reclaim(self, now: float, k: int) -> List[_Job]:
+        """The provider takes ``k`` GPUs back: idle capacity goes first;
+        if that does not cover it, the most-recently-started jobs are
+        killed (their GPU vanishes mid-job).  Reclaim is external — it
+        ignores ``min_gpus`` (the autoscaler re-provisions later).
+        Returns the killed jobs; the caller must re-enter their members
+        and ignore their pending JOB_DONE events (``job.killed``).
+        Each killed job is refunded its UNUSED service (elapsed spot
+        time stays billed — that work was burned, results lost)."""
+        self._advance(now)
+        k = min(k, self.capacity)
+        if k <= 0:
+            return []
+        take_idle = min(k, self.capacity - self.busy)
+        self.capacity -= take_idle
+        self.reclaimed_total += take_idle
+        need = k - take_idle
+        killed: List[_Job] = []
+        if need > 0:
+            victims = sorted(self.running,
+                             key=lambda j: (j.started, j.uid))[-need:]
+            for job in victims:
+                self.running.remove(job)
+                job.killed = True
+                unused = job.service - (now - job.started)
+                self.gpu_seconds -= unused
+                self.weighted_gpu_seconds -= unused * self.cost_weight
+                self.busy -= 1
+                self.capacity -= 1
+                self.reclaimed_total += 1
+                self.killed_total += 1
+                killed.append(job)
+        return killed
+
+    def evict_queue(self, now: float) -> List[_Job]:
+        """Pop EVERY queued job (a fully reclaimed pool would strand its
+        queue forever: jobs never migrate between class queues on their
+        own) so the caller can re-route them."""
+        self._advance(now)
+        evicted: List[_Job] = []
+        while self.queue_len():
+            evicted.append(self._dequeue(now))
+        return evicted
 
     def add_capacity(self, now: float, k: int) -> List[Tuple[_Job, float]]:
         self._advance(now)
@@ -426,6 +530,19 @@ class HeterogeneousDispatcher:
     def released_total(self) -> int:
         return sum(pl.released_total for pl in self.pools.values())
 
+    @property
+    def reclaimed_total(self) -> int:
+        return sum(pl.reclaimed_total for pl in self.pools.values())
+
+    @property
+    def killed_total(self) -> int:
+        return sum(pl.killed_total for pl in self.pools.values())
+
+    def preemptible_pools(self) -> List[GpuPool]:
+        """Pools whose class the provider may reclaim, in class order."""
+        return [pl for pl in self.pools.values()
+                if pl.gpu_class is not None and pl.gpu_class.preemptible]
+
     def queue_depth(self) -> int:
         return sum(pl.queue_len() for pl in self.pools.values())
 
@@ -482,7 +599,7 @@ class HeterogeneousDispatcher:
         return pool.submit(now, job)
 
     def job_done(self, now: float, job: _Job) -> List[Tuple[_Job, float]]:
-        return self.pools[job.gpu_class].job_done(now)
+        return self.pools[job.gpu_class].job_done(now, job)
 
     def add_capacity(self, now: float, name: str,
                      k: int) -> List[Tuple[_Job, float]]:
@@ -505,6 +622,8 @@ class HeterogeneousDispatcher:
                 "utilization": pl.utilization(upto),
                 "preemptible": bool(pl.gpu_class.preemptible
                                     if pl.gpu_class else False),
+                "reclaimed": pl.reclaimed_total,
+                "killed_jobs": pl.killed_total,
             }
         return out
 
@@ -530,6 +649,11 @@ class FleetSimResult:
     per_class: Dict[str, Dict] = dataclasses.field(default_factory=dict)
     dispatch: str = "fifo"
     final_t_lim: float = 0.0            # t_lim after adaptive-SLA updates
+    rejected: int = 0                   # shed at admission (never served)
+    degraded: int = 0                   # shed to pure-local service
+    preempted_gpus: int = 0             # GPUs reclaimed by the provider
+    killed_jobs: int = 0                # running jobs killed by reclaim
+    replans: int = 0                    # members re-planned after a kill
 
     def gpu_seconds_per_request(self) -> float:
         return self.total_gpu_seconds / max(1, len(self.completed))
@@ -569,6 +693,11 @@ class FleetSimResult:
             "final_gpus": self.final_gpus,
             "utilization": self.utilization,
             "final_t_lim": self.final_t_lim,
+            "rejected": self.rejected,
+            "degraded": self.degraded,
+            "preempted_gpus": self.preempted_gpus,
+            "killed_jobs": self.killed_jobs,
+            "replans": self.replans,
             "per_class": self.per_class,
             "timeseries": self.timeseries,
         }
@@ -608,6 +737,18 @@ class FleetSimulator:
             # pool would queue cloud jobs forever and the run never ends
             raise ValueError("autoscale=False requires provisioned or "
                              "min capacity > 0")
+        if cfg.preempt_requeue not in ("replan", "naive"):
+            raise ValueError(f"unknown preempt_requeue "
+                             f"{cfg.preempt_requeue!r}; expected "
+                             f"'replan' or 'naive'")
+        self._preempting = bool(cfg.preempt_rate > 0 or cfg.preempt_trace)
+        if self._preempting and not cfg.autoscale and all(
+                c.preemptible or max(c.count, c.min_count) <= 0
+                for c in self.capacity_spec):
+            # reclaim can zero an all-spot pool; with the autoscaler off
+            # nothing ever replaces it and cloud jobs strand forever
+            raise ValueError("preemption with autoscale=False requires "
+                             "non-preemptible capacity > 0")
         # THE decision-maker: every per-request split / batching /
         # routing decision flows through this one Planner (the scheduler
         # and admission objects below are views into it, kept as
@@ -622,7 +763,10 @@ class FleetSimulator:
             batch_size=cfg.batch_size,
             batch_model=BatchModel.from_timings(cfg.batch_timings)
             if cfg.batch_timings else None,
-            worst_rtt=fleet[0].rtt, dispatch=cfg.dispatch, audit=False)
+            worst_rtt=fleet[0].rtt, dispatch=cfg.dispatch, audit=False,
+            shed_policy=ShedPolicy(queue_high=cfg.shed_queue_high,
+                                   util_high=cfg.shed_util_high)
+            if cfg.shedding else None)
         self.scheduler = self.planner.scheduler
         self.admission = self.planner.admission
         self.devices = fleet_sampler(fleet, seed=cfg.seed + 1,
@@ -657,6 +801,15 @@ class FleetSimulator:
         self._recent_lat: List[float] = []   # since last metrics snapshot
         self._last_busy_int = 0.0
         self._last_cap_int = 0.0
+        # spot preemption: a DEDICATED rng stream so enabling reclaim
+        # never perturbs arrival/fleet sampling (and preempt_rate=0
+        # never draws from it — the bit-identical anchor)
+        self._preempt_rng = np.random.default_rng(cfg.seed + 0x5EED)
+        self._job_uid = itertools.count()
+        self._fastest_rate = max(c.r_cloud for c in self.capacity_spec)
+        self.n_rejected = 0
+        self.n_degraded = 0
+        self.n_replans = 0
 
     # -- event plumbing ----------------------------------------------------
     def _push(self, t: float, kind: int, payload=None) -> None:
@@ -676,6 +829,21 @@ class FleetSimulator:
         if cfg.autoscale:
             self._push(cfg.autoscale_interval_s, EVT_AUTOSCALE)
         self._push(cfg.metrics_interval_s, EVT_METRICS)
+        if cfg.preempt_trace:
+            preemptible = {pl.gpu_class.name
+                           for pl in self.pool.preemptible_pools()}
+            for when, name, k in cfg.preempt_trace:
+                if name not in self.pool.pools:
+                    raise ValueError(f"preempt_trace names unknown class "
+                                     f"{name!r}")
+                if name not in preemptible:
+                    # a typo'd class name must not silently reclaim
+                    # RESERVED capacity the provider cannot take
+                    raise ValueError(f"preempt_trace targets "
+                                     f"non-preemptible class {name!r}")
+                self._push(float(when), EVT_PREEMPT, (name, int(k)))
+        if cfg.preempt_rate > 0:
+            self._arm_preempt(0.0)
 
         last_t = 0.0
         while self._events:
@@ -695,6 +863,8 @@ class FleetSimulator:
                 self._on_complete(t, payload)
             elif kind == EVT_METRICS:
                 self._on_metrics(t)
+            elif kind == EVT_PREEMPT:
+                self._on_preempt(t, payload)
 
         # integrate through the final event so the trailing idle window
         # (device tails after the last cloud job) counts toward the mean
@@ -709,7 +879,10 @@ class FleetSimulator:
             final_gpus=self.pool.total_capacity, utilization=util,
             total_gpu_cost=self.pool.weighted_gpu_seconds,
             per_class=self.pool.per_class_stats(last_t),
-            dispatch=cfg.dispatch, final_t_lim=self._t_lim_now)
+            dispatch=cfg.dispatch, final_t_lim=self._t_lim_now,
+            rejected=self.n_rejected, degraded=self.n_degraded,
+            preempted_gpus=self.pool.reclaimed_total,
+            killed_jobs=self.pool.killed_total, replans=self.n_replans)
 
     # -- adaptive SLA ------------------------------------------------------
     def _set_t_lim(self, t_lim: float) -> None:
@@ -728,11 +901,24 @@ class FleetSimulator:
         rid = f"r{self.n_arrivals}"
         self.n_arrivals += 1
         # one request in, one decision out: split solve, quantization,
-        # batching admission (and the advisory class route) all come
-        # from the planner pipeline in a single call
+        # batching admission, load shedding (and the advisory class
+        # route) all come from the planner pipeline in a single call
+        util_hint = 0.0
+        if self.planner.shed_policy is not None:
+            cap_now = self.pool.total_capacity
+            util_hint = self.pool.total_busy / cap_now if cap_now else 1.0
         decision = self.planner.plan(PlanRequest(
             device=prof, request_id=rid,
-            queue_delay_hint=self.pool.queue_delay_estimate()))
+            queue_delay_hint=self.pool.queue_delay_estimate(),
+            utilization_hint=util_hint))
+        if decision.action == "reject":
+            # shed at admission: refused up front (no deadline opens, no
+            # demand recorded — the autoscaler must not size for it)
+            self.n_rejected += 1
+            self._schedule_next_arrival()
+            return
+        if decision.action == "degrade-to-local":
+            self.n_degraded += 1
         a = decision.assignment()
         req = SimRequest(request_id=rid, arrival=t, profile=prof,
                          assignment=a)
@@ -749,12 +935,16 @@ class FleetSimulator:
         else:
             self._dispatch(t, [req])
 
+        self._schedule_next_arrival()
+
+    def _schedule_next_arrival(self) -> None:
         self._next_arrival = next(self.arrivals, None)
         if self._next_arrival is not None:
             self._push(self._next_arrival, EVT_ARRIVAL)
 
     def _join_window(self, t: float, req: SimRequest,
                      max_wait: float) -> None:
+        req.window_joined = t
         g = self.scheduler.group_key(req.assignment)
         w = self.windows.get(g)
         stale_deadline = t + min(self.cfg.window_s, max_wait)
@@ -784,21 +974,24 @@ class FleetSimulator:
     def _flush_window(self, t: float, w: _Window) -> None:
         del self.windows[w.group]
         for m in w.members:
-            m.window_wait = t - m.arrival
+            # time spent in THIS window (== t - arrival pre-preemption;
+            # a replanned member may re-window long after arrival)
+            m.window_wait += t - m.window_joined
         self._dispatch(t, w.members)
 
     def _cloud_deadline(self, members: List[SimRequest]) -> float:
         """Latest time the CLOUD part may finish: the tightest member's
         e2e deadline (from the DeadlineTracker clock opened at arrival)
         minus its post-cloud tail (rtt + remaining device iterations +
-        decode)."""
+        decode).  ``n_credit`` iterations banked by killed attempts
+        shrink the device tail (replan-on-preemption)."""
         dl = math.inf
         for m in members:
             d = self.tracker.get(m.request_id)
             if d is None:
                 continue
             tail = (m.profile.rtt
-                    + (self.p.n_total - m.assignment.n_final)
+                    + (self.p.n_total - m.assignment.n_final - m.n_credit)
                     / m.profile.r_dev
                     + self.p.k_decode / m.profile.r_dev)
             dl = min(dl, d.deadline - tail)
@@ -817,26 +1010,36 @@ class FleetSimulator:
         deadline = self._cloud_deadline(members)
         cls = self.pool.route(t, n_final, cb, deadline)
         service = self.pool.service_on(cls, n_final, cb)
+        # ACCUMULATE shares (x += y is bit-identical to x = y from the
+        # 0.0 defaults): a preempted member's earlier attempts already
+        # charged it for the spot time they burned
         for m in members:
             m.batched = batched
             m.batch_slowdown = cb
-            m.cloud_service = service
-            m.gpu_seconds = service / b
+            m.cloud_service += service
+            m.gpu_seconds += service / b
             m.gpu_class = cls.name
-            m.gpu_cost = m.gpu_seconds * cls.cost_weight
+            m.gpu_cost += (service / b) * cls.cost_weight
             m.cloud_rate = cls.r_cloud
         job = _Job(group=n_final, members=members, service=service,
-                   submitted=t, deadline=deadline, gpu_class=cls.name)
+                   submitted=t, deadline=deadline, gpu_class=cls.name,
+                   uid=next(self._job_uid))
         finish = self.pool.submit(t, job)
         if finish is not None:
             self._push(finish, EVT_JOB_DONE, job)
 
     def _on_job_done(self, t: float, job: _Job) -> None:
+        if job.killed:
+            # a spot reclaim killed this job after its JOB_DONE event
+            # was scheduled; the pool already forgot it and the members
+            # were re-entered at kill time
+            return
         for m in job.members:
-            m.queue_wait = job.started - job.submitted
+            m.queue_wait += job.started - job.submitted
             a = m.assignment
             done = (t + m.profile.rtt
-                    + (self.p.n_total - a.n_final) / m.profile.r_dev
+                    + (self.p.n_total - a.n_final - m.n_credit)
+                    / m.profile.r_dev
                     + self.p.k_decode / m.profile.r_dev)
             self._push(done, EVT_COMPLETE, m)
         for nxt, finish in self.pool.job_done(t, job):
@@ -846,6 +1049,143 @@ class FleetSimulator:
         name, k = payload
         for job, finish in self.pool.add_capacity(t, name, k):
             self._push(finish, EVT_JOB_DONE, job)
+
+    # -- spot preemption (docs/preemption.md) ------------------------------
+    def _arm_preempt(self, t: float) -> None:
+        """Schedule the next Poisson reclaim.  The hazard is
+        ``preempt_rate`` per PROVISIONED preemptible GPU, evaluated at
+        arming time (the standard event-driven approximation: the rate
+        lags capacity changes by at most one reclaim interval).  With no
+        spot capacity provisioned yet, poll at the autoscale cadence
+        without consuming randomness."""
+        cap_p = sum(pl.capacity for pl in self.pool.preemptible_pools())
+        rate = self.cfg.preempt_rate * cap_p
+        if rate > 0:
+            gap = float(self._preempt_rng.exponential(1.0 / rate))
+        else:
+            gap = self.cfg.autoscale_interval_s
+        self._push(t + gap, EVT_PREEMPT, None)
+
+    def _on_preempt(self, t: float, payload) -> None:
+        """A reclaim fires: ``payload`` is ``(class_name, k)`` for a
+        scripted trace event, or None for a Poisson event (one GPU from
+        a preemptible pool drawn capacity-proportionally)."""
+        if payload is None:
+            pools = [pl for pl in self.pool.preemptible_pools()
+                     if pl.capacity > 0]
+            if pools:
+                caps = np.array([pl.capacity for pl in pools], float)
+                idx = int(self._preempt_rng.choice(
+                    len(pools), p=caps / caps.sum()))
+                self._reclaim_from(t, pools[idx], 1)
+            if self._active() and self.cfg.preempt_rate > 0:
+                self._arm_preempt(t)
+            return
+        name, k = payload
+        self._reclaim_from(t, self.pool.pools[name], k)
+
+    def _reclaim_from(self, t: float, pool: GpuPool, k: int) -> None:
+        killed = pool.reclaim(t, k)
+        if pool.capacity == 0 and pool.queue_len():
+            # a fully reclaimed pool would strand its queue forever
+            # (jobs never migrate between class queues on their own):
+            # evict and re-route through the same requeue path.  Queued
+            # jobs never started, so their members are refunded in full.
+            killed += pool.evict_queue(t)
+        self._requeue_killed(t, killed)
+
+    def _requeue_killed(self, t: float, killed: List[_Job]) -> None:
+        for job in killed:
+            b = len(job.members)
+            started = job.started >= 0
+            elapsed = (t - job.started) if started else 0.0
+            unused = job.service - elapsed
+            cls = self.capacity_spec[job.gpu_class]
+            # refund each member's share of the service that will never
+            # run (mirrors the pool-level refund in GpuPool.reclaim;
+            # elapsed spot time stays billed), keep cloud_service at the
+            # wall time the attempt ACTUALLY consumed, and bank the
+            # killed attempt's queue wait (its JOB_DONE never fires)
+            for m in job.members:
+                m.gpu_seconds -= unused / b
+                m.gpu_cost -= (unused / b) * cls.cost_weight
+                m.cloud_service -= unused
+                m.queue_wait += (job.started if started else t) \
+                    - job.submitted
+                m.preemptions += 1
+            if self.cfg.preempt_requeue == "naive":
+                # full restart: same split, no credit, original deadline
+                # — re-routes (possibly to another class) and requeues
+                self._dispatch(t, job.members)
+                continue
+            # replan: iterations the killed attempt banked (the batch
+            # progressed jointly at the class rate / batch slowdown)
+            cb = job.members[0].batch_slowdown if started else 1.0
+            n_done = int(elapsed * cls.r_cloud / cb) if started else 0
+            n_done = max(0, min(job.group, n_done))
+            self._replan_members(t, job.members, n_done)
+
+    def _replan_members(self, t: float, members: List[SimRequest],
+                        n_done: int) -> None:
+        """Re-enter killed members through the planner: elapsed-time
+        credit (``n_done`` banked iterations each) under each member's
+        tightened remaining deadline.  The replan decides where the
+        REMAINING work runs — more cloud iterations or a pure-local
+        finish — and the §4.4 admission applies under the TIGHTENED
+        budget, so a member with slack rejoins its group's batching
+        window (merging back into normal flow) while a tight one
+        dispatches now.  Tight members whose replans land in the same
+        quantized group re-dispatch as ONE batch: re-splitting a killed
+        batch into solo jobs would multiply the queue load the reclaim
+        caused."""
+        regroup: Dict[int, List[SimRequest]] = {}
+        for m in members:
+            m.n_credit += n_done
+            d = self.tracker.get(m.request_id)
+            time_left = (d.deadline - t) if d is not None else 0.0
+            decision = self.planner.replan_preempted(
+                PlanRequest(
+                    device=m.profile, request_id=m.request_id,
+                    queue_delay_hint=self.pool.queue_delay_estimate()),
+                n_done=m.n_credit, time_left=time_left)
+            m.assignment = decision.assignment()
+            self.n_replans += 1
+            if m.assignment.n_final <= 0:
+                # the device can finish the remainder inside the budget
+                # (or nothing remains): ship the partial latent + decode
+                done = (t + m.profile.rtt
+                        + (self.p.n_total - m.n_credit) / m.profile.r_dev
+                        + self.p.k_decode / m.profile.r_dev)
+                self._push(done, EVT_COMPLETE, m)
+            elif decision.batch_admit:
+                self._join_window(t, m, decision.batch_max_wait)
+            else:
+                regroup.setdefault(m.assignment.n_final, []).append(m)
+        for group in regroup.values():
+            self._dispatch(t, group)
+
+    def _preempt_discounts(self) -> Optional[Dict[str, float]]:
+        """Per-class effective-rate discounts for the §4.5 re-plan:
+        expected useful throughput of a spot GPU under the configured
+        Poisson reclaim hazard (``capacity.preemption_discount``).  The
+        expected job length uses the demand window's mean group size at
+        the configured batch slowdown; replans carry elapsed-time
+        credit, so only naive requeue charges the half-job restart
+        loss.  None when preemption is off."""
+        cfg = self.cfg
+        if cfg.preempt_rate <= 0:
+            return None
+        loss = 0.5 if cfg.preempt_requeue == "naive" else 0.0
+        groups = [n for _, n, _, _ in self._demand if n > 0]
+        mean_n = sum(groups) / len(groups) if groups else float(
+            self.p.n_total)
+        cb = (self.planner.c_batch_of(cfg.batch_size)
+              if self.admission is not None else 1.0)
+        return {
+            c.name: preemption_discount(
+                cfg.preempt_rate, provision_delay_s=cfg.provision_delay_s,
+                job_s=mean_n * cb / c.r_cloud, restart_loss=loss)
+            for c in self.capacity_spec if c.preemptible}
 
     def _on_autoscale(self, t: float) -> None:
         cfg = self.cfg
@@ -891,7 +1231,12 @@ class FleetSimulator:
             # jobs hold a slow class longer, which is what starves the
             # reserved slice under blind spot-first scaling
             demand_c_batch=self.planner.c_batch_of(cfg.batch_size)
-            if self.admission is not None else 1.0)
+            if self.admission is not None else 1.0,
+            # preemption-aware headroom: spot supply is discounted by
+            # the expected reclaim loss, so meeting the same demand
+            # provisions extra spot GPUs (None when preempt_rate=0 —
+            # the bit-identical anchor)
+            rate_discounts=self._preempt_discounts())
         for name, target in plan.targets.items():
             pl = self.pool.pools[name]
             provisioned_total = pl.capacity + pl.pending
@@ -910,9 +1255,20 @@ class FleetSimulator:
         a = req.assignment
         # no-queue latency floor at the rate the job actually ran (waits
         # and queues only ADD to this)
-        lower = e2e_latency(a.n_final, req.profile.r_dev, self.p,
-                            req.profile.rtt, c_batch=req.batch_slowdown,
-                            r_cloud=req.cloud_rate or None)
+        if req.n_credit > 0:
+            # preempted + replanned: attempts may have run on different
+            # classes, so the only safe floor counts ALL cloud
+            # iterations (banked + final) at the fastest class's solo
+            # rate
+            lower = e2e_latency(req.n_credit + a.n_final,
+                                req.profile.r_dev, self.p,
+                                req.profile.rtt, c_batch=1.0,
+                                r_cloud=self._fastest_rate)
+        else:
+            lower = e2e_latency(a.n_final, req.profile.r_dev, self.p,
+                                req.profile.rtt,
+                                c_batch=req.batch_slowdown,
+                                r_cloud=req.cloud_rate or None)
         self.completed.append(CompletedRequest(
             request_id=req.request_id, device_id=req.profile.device_id,
             arrival=req.arrival, n_final=a.n_final,
@@ -921,7 +1277,8 @@ class FleetSimulator:
             queue_wait=req.queue_wait, cloud_service=req.cloud_service,
             gpu_seconds=req.gpu_seconds, completion=t,
             latency=t - req.arrival, lower_bound=lower, violated=late,
-            gpu_class=req.gpu_class, gpu_cost=req.gpu_cost))
+            gpu_class=req.gpu_class, gpu_cost=req.gpu_cost,
+            preemptions=req.preemptions, n_credit=req.n_credit))
         self._recent_lat.append(t - req.arrival)
 
     def _on_metrics(self, t: float) -> None:
@@ -958,6 +1315,11 @@ class FleetSimulator:
             "gpu_seconds": self.pool.gpu_seconds,
             "gpu_cost": self.pool.weighted_gpu_seconds,
             "t_lim": self._t_lim_now,
+            "preempted_gpus": self.pool.reclaimed_total,
+            "killed_jobs": self.pool.killed_total,
+            "rejected": self.n_rejected,
+            "degraded": self.n_degraded,
+            "replans": self.n_replans,
             "per_class": {name: {"gpus": pl.capacity, "busy": pl.busy,
                                  "queue": pl.queue_len()}
                           for name, pl in self.pool.pools.items()},

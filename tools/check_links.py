@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Fail on dead RELATIVE links in docs/ and ROADMAP.md.
+
+Scans markdown inline links `[text](target)` and reference definitions
+`[ref]: target`, resolves relative targets against the containing file,
+and exits non-zero listing every target that does not exist.  External
+links (http/https/mailto) and pure in-page anchors (#...) are skipped;
+a `path#anchor` target only checks the path.
+
+    python tools/check_links.py [files-or-dirs...]   # default: docs ROADMAP.md
+"""
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+# inline [text](target) — target up to the first unescaped ')';
+# reference-style "[ref]: target" lines
+INLINE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def targets(md: Path):
+    text = md.read_text(encoding="utf-8")
+    # fenced code blocks regularly contain [x](y)-shaped non-links
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    for pat in (INLINE, REFDEF):
+        for m in pat.finditer(text):
+            yield m.group(1)
+
+
+def check(files):
+    dead = []
+    for md in files:
+        for target in targets(md):
+            if target.startswith(SKIP):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                try:
+                    where = md.relative_to(REPO)
+                except ValueError:
+                    where = md
+                dead.append(f"{where}: dead link '{target}' -> {resolved}")
+    return dead
+
+
+def main(argv):
+    roots = [Path(a) for a in argv] or [REPO / "docs", REPO / "ROADMAP.md"]
+    files = []
+    for root in roots:
+        if root.is_dir():
+            files += sorted(root.rglob("*.md"))
+        elif root.suffix == ".md":
+            files.append(root)
+        else:
+            print(f"skipping non-markdown arg {root}", file=sys.stderr)
+    dead = check(files)
+    for line in dead:
+        print(line, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'FAIL, ' + str(len(dead)) + ' dead link(s)' if dead else 'ok'}")
+    return 1 if dead else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
