@@ -18,6 +18,7 @@ MODULES = [
     "scheduler_table4",   # Table 4 + Figs 11-13
     "batching_sweep",     # Figs 14-15
     "fleet_sim_sweep",    # beyond-paper: continuous serving, rate x policy
+    "throughput",         # beyond-paper: simulation-core events/sec cells
     "projection",         # Figs 16-20
     "ablation_nstep",     # beyond-paper: quantization-granularity sweep
     "roofline_report",    # EXPERIMENTS.md §Roofline (reads dryrun.jsonl)

@@ -62,11 +62,27 @@ class BatchingAdmission:
         # wait (same guard as the static scheduler): c_batch < batch_size
         self.saves_time = self.c_batch < batch_size
 
-    def decide(self, n_final: int, r_dev: float, rtt: float,
-               queue_delay_hint: float = 0.0) -> AdmissionDecision:
+    def latencies(self, n_final: int, r_dev: float,
+                  rtt: float) -> "tuple[float, float]":
+        """The hint-independent part of a decision: (solo, batched)
+        predicted latencies.  Split out so the planner's ``PlanCache``
+        can memoize them per device profile and re-run only the cheap
+        hint-dependent verdict (``decide_from``) per request."""
         solo = e2e_latency(n_final, r_dev, self.p, rtt, c_batch=1.0)
         batched = e2e_latency(n_final, r_dev, self.p, rtt,
                               c_batch=self.c_batch)
+        return solo, batched
+
+    def decide(self, n_final: int, r_dev: float, rtt: float,
+               queue_delay_hint: float = 0.0) -> AdmissionDecision:
+        solo, batched = self.latencies(n_final, r_dev, rtt)
+        return self.decide_from(n_final, solo, batched, queue_delay_hint)
+
+    def decide_from(self, n_final: int, solo: float, batched: float,
+                    queue_delay_hint: float = 0.0) -> AdmissionDecision:
+        """The verdict given precomputed latencies — THE branch logic
+        (``decide`` and the planner's cached path both end here, so the
+        two can never drift)."""
         if n_final <= 0:
             return AdmissionDecision(False, 0.0, batched, solo,
                                      "local-only request; nothing to batch")

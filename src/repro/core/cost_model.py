@@ -24,6 +24,7 @@ FLOP-throughputs — see ``solve_split_fraction``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Optional, Sequence
 
@@ -83,6 +84,14 @@ def solve_n_cloud(r_dev: float, p: CostParams, t_network: float,
         return float(p.n_total)
     n = rhs / denom                      # both negative -> positive
     return min(float(p.n_total), max(0.0, n))
+
+
+#: Memoized ``solve_n_cloud`` for hot loops: the same closed-form root,
+#: cached per (r_dev, params, t_network, c_batch, r_cloud).  CostParams
+#: is frozen (hashable), so a ``set_t_lim``-style params swap is a new
+#: key — stale roots can never be served.  Pure and deterministic:
+#: cached and direct calls are bit-identical by construction.
+solve_n_cloud_cached = functools.lru_cache(maxsize=1 << 16)(solve_n_cloud)
 
 
 def quantize_step(n_cloud: float, n_step: int, n_total: int) -> int:

@@ -393,8 +393,124 @@ class ShedPolicy:
                              "locally-FEASIBLE request could be rejected)")
 
     def pressured(self, request: "PlanRequest", t_lim: float) -> bool:
-        return (request.queue_delay_hint > self.queue_high * t_lim
-                or request.utilization_hint >= self.util_high)
+        return self.pressured_hints(request.queue_delay_hint,
+                                    request.utilization_hint, t_lim)
+
+    def pressured_hints(self, queue_delay_hint: float,
+                        utilization_hint: float, t_lim: float) -> bool:
+        """The same predicate on bare hints (the planner's cached hot
+        path carries hints without a PlanRequest wrapper)."""
+        return (queue_delay_hint > self.queue_high * t_lim
+                or utilization_hint >= self.util_high)
+
+
+# --------------------------------------------------------------------------
+# Plan memoization (the hot-loop cache behind Planner.plan)
+# --------------------------------------------------------------------------
+class _PlanEntry:
+    """Memoized profile-dependent intermediates of one pipeline run:
+    the split solve + quantization (``asg``), the solo GPU time, the
+    §4.4 admission latencies, and the pure-local latency the shedding
+    stage compares against.  The hint-dependent stages (admission
+    verdict, shedding) are re-run per request from these — so cached
+    decisions are bit-identical to pipeline decisions by construction.
+
+    ``last_decision`` additionally memoizes the fully assembled decision
+    for the previous (queue, utilization) hints: steady-state traffic
+    with an empty queue repeats (0.0, 0.0) and skips even the assembly.
+    """
+
+    __slots__ = ("epoch", "asg", "gpu_time", "has_admission", "solo",
+                 "batched", "local_lat", "deny_slack", "deny_decision",
+                 "last_qhint", "last_uhint", "last_device_id",
+                 "last_decision")
+
+    def __init__(self, epoch: int, asg: Assignment, gpu_time: float,
+                 has_admission: bool, solo: float, batched: float,
+                 local_lat: float, deny_slack: float):
+        self.epoch = epoch
+        self.asg = asg
+        self.gpu_time = gpu_time
+        self.has_admission = has_admission
+        self.solo = solo
+        self.batched = batched
+        self.local_lat = local_lat
+        #: queue hints >= this slack all produce the SAME decision
+        #: (admission denies with max_wait=0 and nothing else reads the
+        #: hint), memoized as ``deny_decision``.  -inf when admission is
+        #: impossible for this profile: then EVERY un-pressured hint
+        #: shares the one decision.
+        self.deny_slack = deny_slack
+        self.deny_decision: Optional["PlanDecision"] = None
+        self.last_qhint = math.nan       # never equal: first hit assembles
+        self.last_uhint = math.nan
+        self.last_device_id = ""
+        self.last_decision: Optional["PlanDecision"] = None
+
+
+class PlanCache:
+    """Memoizes ``Planner.plan`` across requests with the same device
+    profile — the fleet case: a production fleet has FEW distinct
+    (r_dev, rtt, bandwidth) profiles, so after warm-up every arrival is
+    an O(1) lookup instead of a split/quantize/admission/shed pipeline
+    run (the same redundant-work observation JointDNN makes for its
+    per-device offline profiles).
+
+    Keys are the decision-relevant ``DeviceProfile`` fields — EXACT by
+    default, so a hit replays precisely the inputs it was computed from
+    and cached == uncached is guaranteed bit-identical (property-tested).
+    ``quanta=(dr, drtt, dbw)`` opts into approximate bucketing of the
+    continuous fields for noisy live telemetry (trades exactness for hit
+    rate; never used by the simulator's golden-trace configs).
+
+    Invalidation is epoch-based: the owning planner bumps
+    ``config_epoch`` on every decision-relevant mutation (``set_t_lim``,
+    ``set_capacity``, ``set_shed_policy``) and stale entries miss.
+    Entries are evicted FIFO beyond ``max_entries``.  Decisions returned
+    from the cache are SHARED objects — callers must treat them (and
+    their assignments) as read-only, which every repo consumer does.
+    """
+
+    def __init__(self, max_entries: int = 4096,
+                 quanta: Optional[Tuple[float, float, float]] = None):
+        if max_entries <= 0:
+            raise ValueError("max_entries must be positive")
+        self.max_entries = max_entries
+        self.quanta = quanta
+        self._entries: Dict[tuple, _PlanEntry] = {}
+        self.hits = 0                 # profile entry reused (solve skipped)
+        self.misses = 0               # full pipeline ran
+
+    def key_for(self, prof: DeviceProfile) -> tuple:
+        # NOTE: the quanta-None return below is inlined in
+        # Planner.plan_profile (hot path) — change both together (a
+        # lockstep test pins their equality)
+        r_dev, rtt, bw = prof.r_dev, prof.rtt, prof.bandwidth
+        if self.quanta is not None:
+            dr, drtt, dbw = self.quanta
+            if dr > 0:
+                r_dev = round(r_dev / dr) * dr
+            if drtt > 0:
+                rtt = round(rtt / drtt) * drtt
+            if dbw > 0:
+                bw = round(bw / dbw) * dbw
+        return (r_dev, rtt, bw, prof.k_decode, prof.has_accelerator)
+
+    def store(self, key: tuple, entry: _PlanEntry) -> None:
+        entries = self._entries
+        if len(entries) >= self.max_entries and key not in entries:
+            del entries[next(iter(entries))]
+        entries[key] = entry
+
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def __len__(self) -> int:
+        return len(self._entries)
 
 
 # --------------------------------------------------------------------------
@@ -449,7 +565,8 @@ class Planner:
                  solve_c_batch: float = 1.0,
                  audit: bool = True,
                  sla_source: str = "fixed",
-                 shed_policy: Optional[ShedPolicy] = None):
+                 shed_policy: Optional[ShedPolicy] = None,
+                 cache: object = True):
         if params is None:
             if job is None:
                 raise ValueError("need params or a JobSpec")
@@ -499,6 +616,22 @@ class Planner:
         # on set_t_lim, so cache the dict (treated as read-only by
         # decisions; to_json() deep-copies it for the wire)
         self._config_cache: Optional[Dict[str, Any]] = None
+        #: monotone counter of decision-relevant config mutations; the
+        #: PlanCache validates entries against it, so set_t_lim /
+        #: set_capacity / set_shed_policy can never serve stale plans
+        self.config_epoch = 0
+        self.plan_calls = 0
+        # cache=True builds a fresh PlanCache; pass a PlanCache to size/
+        # tune it, or False/None to disable.  The cache engages only in
+        # hot-loop (audit=False) mode: audited decisions embed per-
+        # request payloads and are never shared.
+        if isinstance(cache, PlanCache):
+            self.cache: Optional[PlanCache] = cache   # caller-provided
+        elif cache:                       # any truthy flag (True, 1, a
+            self.cache = PlanCache()      # numpy bool from a config...)
+        else:
+            self.cache = None
+        self._cb_cache: Dict[int, float] = {}
 
     # -- construction helpers ----------------------------------------------
     @classmethod
@@ -559,22 +692,218 @@ class Planner:
             self.admission.p = self.p
         self._sla_source = source
         self._config_cache = None
+        self.config_epoch += 1            # invalidates every cached plan
+
+    def set_capacity(self, capacity: Optional[CloudCapacity]) -> None:
+        """Swap the capacity model (advisory routing + dispatch-time
+        route policy) for FUTURE decisions; invalidates cached plans."""
+        self.capacity = capacity
+        self.route_policy = (
+            RoutePolicy(capacity, self.p,
+                        deadline_aware=self.dispatch == "edf")
+            if capacity is not None else None)
+        self._config_cache = None
+        self.config_epoch += 1
+
+    def set_shed_policy(self, shed_policy: Optional[ShedPolicy]) -> None:
+        """Swap the load-shedding pressure valve for FUTURE decisions;
+        invalidates cached plans."""
+        self.shed_policy = shed_policy
+        self._config_cache = None
+        self.config_epoch += 1
 
     # -- batching constants -------------------------------------------------
     def c_batch_of(self, batch_size: int) -> float:
         """Slowdown of a batch-b cloud launch: the fitted BatchModel when
         calibrated timings were given, else the §4.4 linear
-        extrapolation from the pinned batch-2 measurement."""
-        if self.batch_model is not None:
-            return self.batch_model.c_batch(batch_size)
-        return c_batch_at(self._c_batch_2, batch_size)
+        extrapolation from the pinned batch-2 measurement.  Memoized:
+        the constants behind it never mutate, and the fleet simulator
+        asks per dispatched batch."""
+        cb = self._cb_cache.get(batch_size)
+        if cb is None:
+            if self.batch_model is not None:
+                cb = self.batch_model.c_batch(batch_size)
+            else:
+                cb = c_batch_at(self._c_batch_2, batch_size)
+            self._cb_cache[batch_size] = cb
+        return cb
 
     # -- the pipeline -------------------------------------------------------
     def plan(self, request: PlanRequest) -> PlanDecision:
-        """Run the policy pipeline for one request."""
+        """Run the policy pipeline for one request.
+
+        Audit mode runs the full inline pipeline (trace + replay
+        payloads, advisory routing).  Hot-loop (audit=False) mode runs
+        the same value pipeline through the PlanCache: repeat device
+        profiles skip the split/quantize/admission/shed re-derivation
+        and only the hint-dependent verdicts re-run.
+        """
+        if not self.audit:
+            return self.plan_profile(request.profile(),
+                                     request.queue_delay_hint,
+                                     request.utilization_hint)
+        return self._plan_audited(request)
+
+    # -- hot path: memoized profile solve + hint-dependent assembly ---------
+    def plan_profile(self, prof: DeviceProfile,
+                     queue_delay_hint: float = 0.0,
+                     utilization_hint: float = 0.0) -> PlanDecision:
+        """Plan for a bare DeviceProfile (the fleet simulator's per-
+        arrival entry: no PlanRequest wrapper to build or unpack).
+        Only valid in hot-loop mode — audited planners need the request
+        payload for their replay contract."""
+        self.plan_calls += 1
+        cache = self.cache
+        if cache is not None and cache.quanta is None:
+            # inlined PlanCache.key_for exact branch (hot path; the
+            # tuples must stay in lockstep — pinned by
+            # test_plan_cache.test_cache_quanta_buckets_continuous_fields)
+            key = (prof.r_dev, prof.rtt, prof.bandwidth, prof.k_decode,
+                   prof.has_accelerator)
+        elif cache is not None:
+            key = cache.key_for(prof)
+        else:
+            entry = self._solve_profile(prof)
+            return self._finish(prof, queue_delay_hint, utilization_hint,
+                                entry)
+        entry = cache._entries.get(key)
+        if entry is not None and entry.epoch == self.config_epoch:
+            cache.hits += 1
+            if (queue_delay_hint == entry.last_qhint
+                    and utilization_hint == entry.last_uhint
+                    and prof.device_id == entry.last_device_id):
+                return entry.last_decision
+            # hints above the admission slack all yield the SAME denial
+            # (max_wait=0; no other stage reads the hint), so share one
+            # decision object across them — exactness argument in the
+            # _PlanEntry docstring
+            if (queue_delay_hint >= entry.deny_slack
+                    and prof.device_id == entry.asg.device_id
+                    and (self.shed_policy is None
+                         or not self.shed_policy.pressured_hints(
+                             queue_delay_hint, utilization_hint,
+                             self.p.t_lim))):
+                decision = entry.deny_decision
+                if decision is None:
+                    decision = self._finish(prof, queue_delay_hint,
+                                            utilization_hint, entry)
+                    entry.deny_decision = decision
+                return decision
+        else:
+            cache.misses += 1
+            entry = self._solve_profile(prof)
+            cache.store(key, entry)
+        decision = self._finish(prof, queue_delay_hint, utilization_hint,
+                                entry)
+        entry.last_qhint = queue_delay_hint
+        entry.last_uhint = utilization_hint
+        entry.last_device_id = prof.device_id
+        entry.last_decision = decision
+        return decision
+
+    def _solve_profile(self, prof: DeviceProfile) -> _PlanEntry:
+        """Stages whose outputs depend only on the device profile and
+        the planner config: split solve + quantization, solo GPU time,
+        the §4.4 admission latencies, and the pure-local latency the
+        shedding stage compares against."""
+        p = self.p
+        a = self.scheduler.assign_one(prof)
+        gpu_time = cloud_gpu_time(a.n_final, p) if a.n_final > 0 else 0.0
+        has_admission = self.admission is not None and a.n_final > 0
+        if has_admission:
+            solo, batched = self.admission.latencies(a.n_final, prof.r_dev,
+                                                     prof.rtt)
+            deny_slack = ((p.t_lim - batched) if self.admission.saves_time
+                          else -math.inf)
+        else:
+            solo = batched = a.latency
+            deny_slack = -math.inf       # decision is hint-independent
+        local_lat = (e2e_latency(0, prof.r_dev, p, prof.rtt, c_batch=1.0)
+                     if self.shed_policy is not None else 0.0)
+        return _PlanEntry(self.config_epoch, a, gpu_time, has_admission,
+                          solo, batched, local_lat, deny_slack)
+
+    def _finish(self, prof: DeviceProfile, queue_delay_hint: float,
+                utilization_hint: float,
+                entry: _PlanEntry) -> PlanDecision:
+        """Hint-dependent assembly: §4.4 admission verdict + load
+        shedding + decision construction.  Value-identical to the
+        audited pipeline (pinned by test_non_audit_plan_matches_audit_
+        values and the cached==uncached property tests)."""
+        p = self.p
+        a = entry.asg
+        if a.device_id != prof.device_id:
+            # same (r_dev, rtt, ...) key from a different device: the
+            # decision values are identical, but the Assignment names
+            # the requester
+            a = dataclasses.replace(a, device_id=prof.device_id)
+        gpu_time = entry.gpu_time
+
+        if entry.has_admission:
+            dec = self.admission.decide_from(a.n_final, entry.solo,
+                                             entry.batched,
+                                             queue_delay_hint)
+            admit, max_wait = dec.admit, dec.max_wait
+            batch_lat, solo_lat = dec.batched_latency, dec.solo_latency
+            reason = dec.reason
+        else:
+            admit, max_wait = False, 0.0
+            batch_lat, solo_lat = a.latency, a.latency
+            reason = (f"policy {self.policy!r} does not batch"
+                      if self.admission is None
+                      else "local-only request; nothing to batch")
+
+        action, shed_reason = "admit", ""
+        gpu_class: Optional[str] = None
+        cloud_rate = p.r_cloud
+        if self.shed_policy is not None and a.n_final > 0 \
+                and self.shed_policy.pressured_hints(
+                    queue_delay_hint, utilization_hint, p.t_lim):
+            local_lat = entry.local_lat
+            queued_lat = a.latency + queue_delay_hint
+            ceil = self.shed_policy.degrade_ceil * p.t_lim
+            hint = (f"queue_hint={queue_delay_hint:.3g}s, "
+                    f"util_hint={utilization_hint:.2f}")
+            if queued_lat <= p.t_lim + 1e-9:
+                shed_reason = (f"pressure ({hint}) but the queued cloud "
+                               f"plan still fits: {queued_lat:.4g} <= "
+                               f"{p.t_lim:.4g}")
+            elif local_lat <= ceil + 1e-9:
+                action = "degrade-to-local"
+                shed_reason = (f"pressure ({hint}); queued cloud plan "
+                               f"misses t_lim ({queued_lat:.4g}s) but the "
+                               f"device finishes in {local_lat:.4g}s <= "
+                               f"{ceil:.4g}s — §7 graceful degradation")
+                a = dataclasses.replace(
+                    a, n_final=0, latency=local_lat,
+                    feasible=local_lat <= p.t_lim + 1e-9,
+                    batched=False, batch_factor=1.0)
+                gpu_time = 0.0
+                admit, max_wait = False, 0.0
+                reason = "shed: degraded to local; nothing to batch"
+            else:
+                action = "reject"
+                shed_reason = (f"pressure ({hint}) and no winnable plan: "
+                               f"queued cloud {queued_lat:.4g}s misses "
+                               f"t_lim and local {local_lat:.4g}s > "
+                               f"degrade ceiling {ceil:.4g}s")
+
+        return PlanDecision(
+            request={}, planner={},
+            n_exact=a.n_exact, n_final=a.n_final, latency=a.latency,
+            feasible=a.feasible, gpu_time=gpu_time, gpu_class=gpu_class,
+            cloud_rate=cloud_rate, batch_admit=admit,
+            batch_max_wait=max_wait, batch_latency=batch_lat,
+            batch_solo_latency=solo_lat, batch_reason=reason,
+            t_lim=p.t_lim, trace=[], action=action,
+            shed_reason=shed_reason, _assignment=a)
+
+    def _plan_audited(self, request: PlanRequest) -> PlanDecision:
+        """The fully traced pipeline (audit=True)."""
+        self.plan_calls += 1
         prof = request.profile()
         p = self.p
-        audit = self.audit
+        audit = True
         trace: List[Dict[str, Any]] = []
 
         # 1+2. split solve + quantize (the Table-4 per-request policy)
@@ -732,7 +1061,8 @@ class Planner:
             batch_size=self.batch_size, batch_model=self.batch_model,
             worst_r_dev=self.worst_r_dev, worst_rtt=self.worst_rtt,
             dispatch=self.dispatch, solve_c_batch=self.solve_c_batch,
-            audit=self.audit, sla_source="replan:preemption")
+            audit=self.audit, sla_source="replan:preemption",
+            cache=False)      # one-shot planner: nothing to re-hit
         return replanner.plan(request)
 
 

@@ -16,6 +16,7 @@ workloads w_group (§4.5) used by the GPU resource allocator.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Dict, List, Optional, Sequence
 
@@ -28,6 +29,7 @@ from repro.core.cost_model import (
     e2e_latency,
     quantize_step,
     solve_n_cloud,
+    solve_n_cloud_cached,
 )
 from repro.core.telemetry import DeviceProfile
 
@@ -139,8 +141,11 @@ class VariableIterationScheduler(SchedulerBase):
         self.solve_c_batch = solve_c_batch
 
     def assign_one(self, prof: DeviceProfile) -> Assignment:
-        n = solve_n_cloud(prof.r_dev, self.p, prof.rtt,
-                          c_batch=self.solve_c_batch)
+        # memoized root: a fleet has few distinct (r_dev, rtt) profiles,
+        # so repeat requests skip the closed-form re-derivation (the
+        # cache key includes self.p — set_t_lim swaps params and misses)
+        n = solve_n_cloud_cached(prof.r_dev, self.p, prof.rtt,
+                                 c_batch=self.solve_c_batch)
         nf = quantize_step(n, self.p.n_step, self.p.n_total)
         return _mk_assignment(prof, n, nf, self.p)
 
@@ -309,6 +314,24 @@ class HeteroAllocationPlan:
         return self.reference.release_gpus
 
 
+@functools.lru_cache(maxsize=1 << 16)
+def _floor_boundary_idx(n_final: int, r_dev: float, t_network: float,
+                        p: CostParams, c_batch: float,
+                        eff_rates: tuple) -> int:
+    """Index (into the fastest-first class walk) of the SLOWEST class
+    whose no-queue latency still meets the SLA for one demand — the
+    inner loop of ``deadline_floors``, memoized: the §4.5 re-plan
+    re-walks the same few distinct device profiles thousands of times
+    per sliding window, and the boundary only depends on the profile,
+    the params epoch, and the (discounted) class rates."""
+    for i in range(len(eff_rates) - 1, -1, -1):
+        lat = e2e_latency(n_final, r_dev, p, t_network, c_batch=c_batch,
+                          r_cloud=eff_rates[i])
+        if lat <= p.t_lim + 1e-9:
+            return i
+    return 0                             # infeasible-everywhere: fastest
+
+
 def deadline_floors(demands, p: CostParams, capacity, horizon_s: float,
                     headroom: float = 1.0,
                     c_batch: float = 1.0,
@@ -351,17 +374,12 @@ def deadline_floors(demands, p: CostParams, capacity, horizon_s: float,
     # its/s of demand whose feasibility boundary is class i (can run on
     # i or anything faster, but nothing slower)
     need_rate = [0.0] * len(classes)
+    eff_rates = tuple(eff[c.name] for c in classes)
     for n_final, r_dev, t_network in demands:
         if n_final <= 0:
             continue
-        idx = 0                          # infeasible-everywhere: fastest
-        for i in range(len(classes) - 1, -1, -1):
-            lat = e2e_latency(n_final, r_dev, p, t_network,
-                              c_batch=c_batch,
-                              r_cloud=eff[classes[i].name])
-            if lat <= p.t_lim + 1e-9:
-                idx = i
-                break
+        idx = _floor_boundary_idx(n_final, r_dev, t_network, p, c_batch,
+                                  eff_rates)
         need_rate[idx] += n_final / horizon_s * headroom
     need = 0.0
     pledged = 0.0

@@ -8,8 +8,9 @@ the network probe keeps EWMA estimates of RTT/bandwidth per client.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
-from typing import Dict, Iterable, Iterator, List, Optional
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -25,6 +26,164 @@ class DeviceProfile:
 
     def decode_time(self) -> float:
         return self.k_decode / self.r_dev
+
+
+# --------------------------------------------------------------------------
+# Latency statistics: one percentile definition + fixed-memory streaming
+# estimators (the fleet simulator's telemetry sink at 10^6-arrival scale)
+# --------------------------------------------------------------------------
+def latency_percentile(values: Sequence[float], q: float) -> float:
+    """THE percentile definition every exact-stats surface shares
+    (``FleetSimResult.latency_percentile`` and the fleet simulator's
+    per-snapshot estimates both call this, so run-level and snapshot
+    percentiles can never drift apart).  ``q`` is in [0, 100] (the
+    ``np.percentile`` convention); empty input returns NaN."""
+    if not len(values):
+        return math.nan
+    return float(np.percentile(values, q))
+
+
+class P2Quantile:
+    """Jain & Chlamtac's P² streaming quantile estimator: tracks one
+    quantile of an unbounded stream with five markers — O(1) memory and
+    O(1) per observation, no stored samples.
+
+    The first five observations are exact (they seed the markers); after
+    that each ``add`` shifts the marker heights by the piecewise-
+    parabolic (P²) interpolation.  Accuracy is within a fraction of a
+    percent of the exact sample quantile for smooth distributions —
+    see the property tests against ``np.percentile``.
+    """
+
+    __slots__ = ("q", "n", "_heights", "_pos", "_want", "_dwant")
+
+    def __init__(self, q: float):
+        if not 0.0 < q < 1.0:
+            raise ValueError(f"quantile must be in (0, 1), got {q}")
+        self.q = q
+        self.n = 0                    # observations seen
+        self._heights: List[float] = []
+        # marker 0 is pinned at position 1 and marker 4 at position n,
+        # so only the three middle desired positions need updating
+        self._pos = [1.0, 2.0, 3.0, 4.0, 5.0]
+        self._want = [1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q]
+        self._dwant = (q / 2.0, q, (1.0 + q) / 2.0)
+
+    def add(self, x: float) -> None:
+        n = self.n = self.n + 1
+        h = self._heights
+        if n <= 5:
+            h.append(x)
+            if n == 5:
+                h.sort()
+            return
+        pos = self._pos
+        want = self._want
+        dw = self._dwant
+        want[0] += dw[0]
+        want[1] += dw[1]
+        want[2] += dw[2]
+        # find the cell and bump the marker positions above it (marker 4
+        # always moves: its position is simply n)
+        pos[4] += 1.0
+        if x < h[2]:
+            if x < h[1]:
+                pos[1] += 1.0
+                if x < h[0]:
+                    h[0] = x
+            pos[2] += 1.0
+            pos[3] += 1.0
+        elif x < h[3]:
+            pos[3] += 1.0
+        elif x >= h[4]:
+            h[4] = x
+        # adjust the three middle markers toward their desired positions
+        for i in (1, 2, 3):
+            pi = pos[i]
+            d = want[i - 1] - pi
+            if d >= 1.0:
+                if pos[i + 1] - pi <= 1.0:
+                    continue
+                d = 1.0
+            elif d <= -1.0:
+                if pos[i - 1] - pi >= -1.0:
+                    continue
+                d = -1.0
+            else:
+                continue
+            hi, lo = h[i + 1], h[i - 1]
+            pn, pp = pos[i + 1], pos[i - 1]
+            # piecewise-parabolic prediction
+            new = h[i] + d / (pn - pp) * (
+                (pi - pp + d) * (hi - h[i]) / (pn - pi)
+                + (pn - pi - d) * (h[i] - lo) / (pi - pp))
+            if lo < new < hi:
+                h[i] = new
+            else:                     # fall back to linear interpolation
+                j = i + int(d)
+                h[i] = h[i] + d * (h[j] - h[i]) / (pos[j] - pi)
+            pos[i] = pi + d
+
+    def value(self) -> float:
+        """Current estimate (NaN before any observation; exact while
+        fewer than five observations have been seen)."""
+        h = self._heights
+        if not h:
+            return math.nan
+        if self.n < 5:
+            xs = sorted(h)
+            # linear-interpolated sample quantile (np.percentile default)
+            rank = self.q * (len(xs) - 1)
+            lo = int(rank)
+            hi = min(lo + 1, len(xs) - 1)
+            return xs[lo] + (rank - lo) * (xs[hi] - xs[lo])
+        return h[2]
+
+
+class StreamingLatencyStats:
+    """Fixed-memory replacement for the fleet simulator's grow-forever
+    ``completed`` / latency lists: counters plus one ``P2Quantile`` per
+    tracked quantile.  ``percentile(q)`` (q in [0, 100], matching
+    ``latency_percentile``) answers only for tracked quantiles — the
+    simulator tracks exactly what its result serializes (p50/p99 by
+    default)."""
+
+    __slots__ = ("count", "batched", "sum", "max", "_estimators",
+                 "_est_tuple")
+
+    def __init__(self, quantiles: Tuple[float, ...] = (50.0, 99.0)):
+        self.count = 0
+        self.batched = 0
+        self.sum = 0.0
+        self.max = 0.0
+        self._estimators = {float(q): P2Quantile(q / 100.0)
+                            for q in quantiles}
+        self._est_tuple = tuple(self._estimators.values())
+
+    def add(self, latency: float, batched: bool = False) -> None:
+        self.count += 1
+        if batched:
+            self.batched += 1
+        self.sum += latency
+        if latency > self.max:
+            self.max = latency
+        for est in self._est_tuple:
+            est.add(latency)
+
+    def percentile(self, q: float) -> float:
+        est = self._estimators.get(float(q))
+        if est is None:
+            raise ValueError(
+                f"streaming stats track only quantiles "
+                f"{sorted(self._estimators)}, not q={q}; run with "
+                f"exact_stats=True for arbitrary percentiles")
+        return est.value()
+
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else math.nan
+
+    def quantiles(self) -> List[float]:
+        return sorted(self._estimators)
 
 
 class EWMAProbe:
@@ -109,10 +268,16 @@ def _thinned_arrivals(peak_rate: float, duration: float, seed: int,
     if peak_rate <= 0:
         return                           # zero rate: empty stream
     rng = np.random.default_rng(seed)
+    # bound fast-path draws: standard_exponential() * scale and random()
+    # consume the bit stream exactly like exponential(scale) / uniform()
+    # (bit-identical values, ~1us less per arrival at fleet rates)
+    exp = rng.standard_exponential
+    unif = rng.random
+    scale = 1.0 / peak_rate
     t = 0.0
     while True:
-        t += rng.exponential(1.0 / peak_rate)
-        u = rng.uniform()             # always drawn: keeps streams coupled
+        t += exp() * scale
+        u = unif()                    # always drawn: keeps streams coupled
         if t >= duration:
             return
         if u <= accept_prob(t):
@@ -191,10 +356,9 @@ def fleet_sampler(fleet: List[DeviceProfile], seed: int = 0,
     if not fleet:
         raise ValueError("empty fleet")
     if mode == "cycle":
-        i = 0
-        while True:
-            yield fleet[i % len(fleet)]
-            i += 1
+        # C-level round-robin (identical sequence to indexing fleet[i %
+        # len(fleet)] forever, ~4x less per-arrival overhead)
+        yield from itertools.cycle(fleet)
     elif mode == "uniform":
         rng = np.random.default_rng(seed)
         while True:

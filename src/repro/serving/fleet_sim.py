@@ -99,14 +99,15 @@ from repro.core.scheduler import (
     Assignment,
     ScheduleSummary,
     allocate_gpus_heterogeneous,
-    group_workloads,
 )
 from repro.core.sla import AdaptiveSLAController, DeadlineTracker, SLAPolicy
 from repro.core.telemetry import (
     DeviceProfile,
+    StreamingLatencyStats,
     bursty_arrivals,
     diurnal_arrivals,
     fleet_sampler,
+    latency_percentile,
     poisson_arrivals,
 )
 from repro.serving.simulator import CALIBRATED, table4_fleet
@@ -190,6 +191,17 @@ class SimConfig:
     shed_util_high: float = 0.95
     # telemetry
     metrics_interval_s: float = 5.0
+    #: keep every CompletedRequest (the golden-trace default; run-level
+    #: percentiles are exact).  False switches to the fixed-memory
+    #: streaming estimator (telemetry.StreamingLatencyStats): counters +
+    #: P² p50/p99, `completed` stays empty — the 10^6-arrival mode.
+    #: Event dynamics are IDENTICAL either way; only stats storage
+    #: changes.
+    exact_stats: bool = True
+    #: memoize Planner.plan across repeat device profiles (bit-identical
+    #: decisions — see core.planner.PlanCache; False re-runs the full
+    #: pipeline per arrival, the pre-cache behavior)
+    plan_cache: bool = True
 
     def build_capacity(self) -> CloudCapacity:
         if self.capacity is not None:
@@ -199,7 +211,7 @@ class SimConfig:
             min_count=self.min_gpus, max_count=self.max_gpus)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class SimRequest:
     request_id: str
     arrival: float
@@ -220,7 +232,7 @@ class SimRequest:
     window_joined: float = 0.0          # when it joined its current window
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class CompletedRequest:
     request_id: str
     device_id: str
@@ -243,9 +255,9 @@ class CompletedRequest:
     n_credit: int = 0                   # cloud iterations banked by replans
 
 
-@dataclasses.dataclass(eq=False)      # identity semantics: two jobs are
-class _Job:                           # never "equal", and kill/remove
-    group: int                        # must target THIS job object
+@dataclasses.dataclass(eq=False, slots=True)  # identity semantics: two
+class _Job:                           # jobs are never "equal"; kill and
+    group: int                        # remove must target THIS object
     members: List[SimRequest]
     service: float                      # wall seconds on one GPU
     submitted: float
@@ -257,7 +269,7 @@ class _Job:                           # never "equal", and kill/remove
                                         # JOB_DONE event becomes a no-op
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _Window:
     group: int
     version: int
@@ -301,7 +313,11 @@ class GpuPool:
         self.weighted_gpu_seconds = 0.0
         self.released_total = 0
         self.peak_capacity = self.capacity
-        self.running: List[_Job] = []   # jobs holding a GPU (kill targets)
+        #: jobs holding a GPU (kill targets), keyed by object identity:
+        #: completion removal is O(1) instead of an O(busy) list scan —
+        #: at fleet scale thousands of GPUs are busy, and the old
+        #: ``list.remove`` was a per-completion linear scan
+        self.running: Dict[int, _Job] = {}
         self.reclaimed_total = 0        # GPUs lost to spot reclaim
         self.killed_total = 0           # running jobs killed by reclaim
         self._busy_integral = 0.0
@@ -322,7 +338,7 @@ class GpuPool:
     def _start(self, now: float, job: _Job) -> float:
         self.busy += 1
         job.started = now
-        self.running.append(job)
+        self.running[id(job)] = job
         self.gpu_seconds += job.service
         self.weighted_gpu_seconds += job.service * self.cost_weight
         return now + job.service
@@ -357,17 +373,40 @@ class GpuPool:
         degrades below FIFO under sustained overload without this.
         Doomed-ness is monotone (deadlines are fixed, time moves
         forward), so the lazy reclassification at pop time is sound.
+
+        Boundedness: every ``_doomed`` entry is a LIVE queued job (it is
+        counted by ``queue_len`` and accounted in ``queued_service``) —
+        this is reclassification, not lazy deletion, so the two heaps
+        together never exceed the live queue.  Entries for jobs killed
+        externally are compacted away at pop time as a safeguard (today
+        only running jobs are ever killed, so the guard is a no-op).
         """
         while self._heap:
             dl, seq, job = heapq.heappop(self._heap)
+            if job.killed:                # compaction guard (see above)
+                self.queued_service -= job.service
+                continue
             if now + job.service > dl + 1e-9:
                 heapq.heappush(self._doomed, (dl, seq, job))
             else:
                 return job
-        return heapq.heappop(self._doomed)[2]
+        while True:
+            job = heapq.heappop(self._doomed)[2]
+            if not job.killed:
+                return job
+            self.queued_service -= job.service
 
     def _drain(self, now: float) -> List[Tuple[_Job, float]]:
         started = []
+        if self.discipline == "fifo":
+            # fast path: the common case is an empty queue after a
+            # completion — one truthiness check, no method calls
+            q = self.queue
+            while q and self.busy < self.capacity:
+                job = q.popleft()
+                self.queued_service -= job.service
+                started.append((job, self._start(now, job)))
+            return started
         while self.queue_len() and self.busy < self.capacity:
             job = self._dequeue(now)
             started.append((job, self._start(now, job)))
@@ -388,7 +427,7 @@ class GpuPool:
         self._advance(now)
         self.busy -= 1
         if job is not None:
-            self.running.remove(job)        # identity (eq=False on _Job)
+            del self.running[id(job)]       # identity (eq=False on _Job)
         return self._drain(now)
 
     # -- spot reclaim (docs/preemption.md) ---------------------------------
@@ -411,10 +450,14 @@ class GpuPool:
         need = k - take_idle
         killed: List[_Job] = []
         if need > 0:
-            victims = sorted(self.running,
-                             key=lambda j: (j.started, j.uid))[-need:]
+            # heap-select the `need` most-recently-started jobs instead
+            # of sorting the whole running set (O(n log need), not
+            # O(n log n)); reversing restores the old ascending kill
+            # order, so refund accumulation stays bit-identical
+            victims = heapq.nlargest(need, self.running.values(),
+                                     key=lambda j: (j.started, j.uid))[::-1]
             for job in victims:
-                self.running.remove(job)
+                del self.running[id(job)]
                 job.killed = True
                 unused = job.service - (now - job.started)
                 self.gpu_seconds -= unused
@@ -456,7 +499,10 @@ class GpuPool:
     def queue_delay_estimate(self) -> float:
         """Rough wait a newly queued job would see (admission hint).
         O(1): queued_service is maintained incrementally."""
-        if not self.queue_len():
+        if self.discipline == "fifo":             # queue_len, inlined
+            if not self.queue:
+                return 0.0
+        elif not (self._heap or self._doomed):
             return 0.0
         return self.queued_service / max(1, self.capacity)
 
@@ -504,6 +550,18 @@ class HeterogeneousDispatcher:
         # from the CLAMPED pool capacities (max(count, min_count)), not
         # the raw class counts — min_count > count would under-report
         self.peak_capacity = self.total_capacity
+        # single-class fast path: with one pool and the planner's
+        # standard RoutePolicy, `choose` provably returns the only class
+        # for every snapshot (free, queued, or empty+pending), so routing
+        # skips the per-job snapshot construction entirely.  Custom
+        # RoutePolicy subclasses always get the full path.
+        self._single_pool: Optional[GpuPool] = (
+            next(iter(self.pools.values())) if len(self.pools) == 1
+            else None)
+        self._single_class: Optional[GpuClass] = (
+            self._single_pool.gpu_class
+            if self._single_pool is not None
+            and type(self.route_policy) is RoutePolicy else None)
 
     # -- aggregates --------------------------------------------------------
     @property
@@ -551,6 +609,8 @@ class HeterogeneousDispatcher:
 
     def queue_delay_estimate(self) -> float:
         """Optimistic admission hint: the least-backed-up class."""
+        if self._single_pool is not None:
+            return self._single_pool.queue_delay_estimate()
         return min(pl.queue_delay_estimate() for pl in self.pools.values())
 
     def utilization(self, upto: float) -> float:
@@ -591,6 +651,8 @@ class HeterogeneousDispatcher:
               deadline: float) -> GpuClass:
         """Ask the planner's RoutePolicy for the executing class, given
         a snapshot of the live per-class queue state."""
+        if self._single_class is not None:
+            return self._single_class
         return self.route_policy.choose(now, n_final, batch_factor,
                                         deadline, self._snapshots())
 
@@ -654,31 +716,52 @@ class FleetSimResult:
     preempted_gpus: int = 0             # GPUs reclaimed by the provider
     killed_jobs: int = 0                # running jobs killed by reclaim
     replans: int = 0                    # members re-planned after a kill
+    #: streaming-stats sink when exact_stats=False (``completed`` stays
+    #: empty; counts/percentiles come from here)
+    stream: Optional[StreamingLatencyStats] = None
+    n_events: int = 0                   # events the run loop processed
+    plan_calls: int = 0                 # Planner.plan invocations
+    plan_cache_hits: int = 0
+    plan_cache_misses: int = 0
+
+    def n_completed(self) -> int:
+        return (self.stream.count if self.stream is not None
+                else len(self.completed))
 
     def gpu_seconds_per_request(self) -> float:
-        return self.total_gpu_seconds / max(1, len(self.completed))
+        return self.total_gpu_seconds / max(1, self.n_completed())
 
     def gpu_cost_per_request(self) -> float:
-        return self.total_gpu_cost / max(1, len(self.completed))
+        return self.total_gpu_cost / max(1, self.n_completed())
 
     def latency_percentile(self, q: float) -> float:
-        lats = [c.latency for c in self.completed]
-        return float(np.percentile(lats, q)) if lats else math.nan
+        """q in [0, 100].  Exact over the completed records by default;
+        the P² estimate (tracked quantiles only) under streaming stats."""
+        if self.stream is not None:
+            return self.stream.percentile(q)
+        return latency_percentile([c.latency for c in self.completed], q)
 
     def batched_fraction(self) -> float:
-        if not self.completed:
+        n = self.n_completed()
+        if not n:
             return 0.0
-        return sum(c.batched for c in self.completed) / len(self.completed)
+        if self.stream is not None:
+            return self.stream.batched / n
+        return sum(c.batched for c in self.completed) / n
 
     def violation_rate(self) -> float:
-        return self.violations / max(1, len(self.completed))
+        return self.violations / max(1, self.n_completed())
+
+    def plan_cache_hit_rate(self) -> float:
+        total = self.plan_cache_hits + self.plan_cache_misses
+        return self.plan_cache_hits / total if total else 0.0
 
     def to_json(self) -> Dict:
         return {
             "policy": self.policy,
             "dispatch": self.dispatch,
             "n_arrivals": self.n_arrivals,
-            "n_completed": len(self.completed),
+            "n_completed": self.n_completed(),
             "violations": self.violations,
             "violation_rate": self.violation_rate(),
             "total_gpu_seconds": self.total_gpu_seconds,
@@ -698,6 +781,12 @@ class FleetSimResult:
             "preempted_gpus": self.preempted_gpus,
             "killed_jobs": self.killed_jobs,
             "replans": self.replans,
+            "exact_stats": self.stream is None,
+            "n_events": self.n_events,
+            "plan_calls": self.plan_calls,
+            "plan_cache_hits": self.plan_cache_hits,
+            "plan_cache_misses": self.plan_cache_misses,
+            "plan_cache_hit_rate": self.plan_cache_hit_rate(),
             "per_class": self.per_class,
             "timeseries": self.timeseries,
         }
@@ -766,7 +855,10 @@ class FleetSimulator:
             worst_rtt=fleet[0].rtt, dispatch=cfg.dispatch, audit=False,
             shed_policy=ShedPolicy(queue_high=cfg.shed_queue_high,
                                    util_high=cfg.shed_util_high)
-            if cfg.shedding else None)
+            if cfg.shedding else None,
+            # plan memoization (core.planner.PlanCache): bit-identical
+            # decisions, O(1) for repeat device profiles
+            cache=cfg.plan_cache)
         self.scheduler = self.planner.scheduler
         self.admission = self.planner.admission
         self.devices = fleet_sampler(fleet, seed=cfg.seed + 1,
@@ -775,6 +867,12 @@ class FleetSimulator:
         self.pool = HeterogeneousDispatcher(
             self.capacity_spec, self.p, discipline=cfg.dispatch,
             route_policy=self.planner.route_policy)
+        # hot-path binding: skip the dispatcher aggregation layer when
+        # there is only one pool (the per-arrival admission hint)
+        self._queue_delay = (
+            self.pool._single_pool.queue_delay_estimate
+            if self.pool._single_pool is not None
+            else self.pool.queue_delay_estimate)
         self.tracker = DeadlineTracker()
         # §7 adaptive SLA: observed utilization relaxes/tightens t_lim
         # for FUTURE arrivals (in-flight deadlines are contracts)
@@ -793,11 +891,21 @@ class FleetSimulator:
         self._seq = itertools.count()
         # sliding-horizon demand window for the §4.5 autoscaler:
         # (t, n_final, r_dev, rtt) — the profile terms feed the
-        # deadline-aware per-class floors
+        # deadline-aware per-class floors.  _wg_counts maintains the
+        # window's per-group request counts INCREMENTALLY, so the
+        # re-plan no longer rescans the whole window (w_group =
+        # n * count is exact integer arithmetic — bit-identical to the
+        # rescan it replaces)
         self._demand: deque = deque()
+        self._wg_counts: Dict[int, int] = {}
         self.completed: List[CompletedRequest] = []
+        #: fixed-memory stats sink (exact_stats=False); None keeps the
+        #: exact completed-record path
+        self.stream: Optional[StreamingLatencyStats] = (
+            None if cfg.exact_stats else StreamingLatencyStats())
         self.timeseries: List[Dict] = []
         self.n_arrivals = 0
+        self.n_events = 0
         self._recent_lat: List[float] = []   # since last metrics snapshot
         self._last_busy_int = 0.0
         self._last_cap_int = 0.0
@@ -845,30 +953,27 @@ class FleetSimulator:
         if cfg.preempt_rate > 0:
             self._arm_preempt(0.0)
 
-        last_t = 0.0
-        while self._events:
-            t, kind, _, payload = heapq.heappop(self._events)
-            last_t = t
-            if kind == EVT_ARRIVAL:
-                self._on_arrival(t)
-            elif kind == EVT_WINDOW:
-                self._on_window(t, payload)
-            elif kind == EVT_JOB_DONE:
-                self._on_job_done(t, payload)
-            elif kind == EVT_CAPACITY:
-                self._on_capacity(t, payload)
-            elif kind == EVT_AUTOSCALE:
-                self._on_autoscale(t)
-            elif kind == EVT_COMPLETE:
-                self._on_complete(t, payload)
-            elif kind == EVT_METRICS:
-                self._on_metrics(t)
-            elif kind == EVT_PREEMPT:
-                self._on_preempt(t, payload)
+        # hot loop: table dispatch (handlers indexed by event kind) with
+        # the heap and pop bound to locals — this loop runs millions of
+        # times per fleet-scale simulation
+        handlers = (self._on_capacity, self._on_job_done,
+                    self._on_arrival, self._on_window, self._on_autoscale,
+                    self._on_complete, self._on_metrics, self._on_preempt)
+        events = self._events
+        pop = heapq.heappop
+        t = 0.0
+        while events:
+            t, kind, _, payload = pop(events)
+            handlers[kind](t, payload)
+        last_t = t
+        # the heap drained, so pops == pushes: the push ordinal counter
+        # IS the processed-event count
+        self.n_events = next(self._seq)
 
         # integrate through the final event so the trailing idle window
         # (device tails after the last cloud job) counts toward the mean
         util = self.pool.utilization(upto=last_t)
+        cache = self.planner.cache
         return FleetSimResult(
             policy=cfg.policy, params=self.p, config=cfg,
             completed=self.completed, timeseries=self.timeseries,
@@ -882,7 +987,11 @@ class FleetSimulator:
             dispatch=cfg.dispatch, final_t_lim=self._t_lim_now,
             rejected=self.n_rejected, degraded=self.n_degraded,
             preempted_gpus=self.pool.reclaimed_total,
-            killed_jobs=self.pool.killed_total, replans=self.n_replans)
+            killed_jobs=self.pool.killed_total, replans=self.n_replans,
+            stream=self.stream, n_events=self.n_events,
+            plan_calls=self.planner.plan_calls,
+            plan_cache_hits=cache.hits if cache else 0,
+            plan_cache_misses=cache.misses if cache else 0)
 
     # -- adaptive SLA ------------------------------------------------------
     def _set_t_lim(self, t_lim: float) -> None:
@@ -896,21 +1005,20 @@ class FleetSimulator:
         self.planner.set_t_lim(t_lim, source="adaptive(§7)")
 
     # -- handlers ----------------------------------------------------------
-    def _on_arrival(self, t: float) -> None:
+    def _on_arrival(self, t: float, _payload=None) -> None:
         prof = next(self.devices)
         rid = f"r{self.n_arrivals}"
         self.n_arrivals += 1
         # one request in, one decision out: split solve, quantization,
         # batching admission, load shedding (and the advisory class
-        # route) all come from the planner pipeline in a single call
+        # route) all come from the planner pipeline in a single call —
+        # plan_profile is the cached hot entry (no PlanRequest wrapper)
         util_hint = 0.0
         if self.planner.shed_policy is not None:
             cap_now = self.pool.total_capacity
             util_hint = self.pool.total_busy / cap_now if cap_now else 1.0
-        decision = self.planner.plan(PlanRequest(
-            device=prof, request_id=rid,
-            queue_delay_hint=self.pool.queue_delay_estimate(),
-            utilization_hint=util_hint))
+        decision = self.planner.plan_profile(
+            prof, self._queue_delay(), util_hint)
         if decision.action == "reject":
             # shed at admission: refused up front (no deadline opens, no
             # demand recorded — the autoscaler must not size for it)
@@ -919,13 +1027,15 @@ class FleetSimulator:
             return
         if decision.action == "degrade-to-local":
             self.n_degraded += 1
-        a = decision.assignment()
+        a = decision._assignment     # always live in hot-loop decisions
+        nf = a.n_final
         req = SimRequest(request_id=rid, arrival=t, profile=prof,
                          assignment=a)
         self.tracker.open(rid, t, self._t_lim_now)
-        self._demand.append((t, a.n_final, prof.r_dev, prof.rtt))
+        self._demand.append((t, nf, prof.r_dev, prof.rtt))
+        self._wg_counts[nf] = self._wg_counts.get(nf, 0) + 1
 
-        if a.n_final <= 0:
+        if nf <= 0:
             # device-only: no cloud resources at all
             done = t + e2e_latency(0, prof.r_dev, self.p, prof.rtt,
                                    c_batch=1.0)
@@ -938,9 +1048,10 @@ class FleetSimulator:
         self._schedule_next_arrival()
 
     def _schedule_next_arrival(self) -> None:
-        self._next_arrival = next(self.arrivals, None)
-        if self._next_arrival is not None:
-            self._push(self._next_arrival, EVT_ARRIVAL)
+        nxt = self._next_arrival = next(self.arrivals, None)
+        if nxt is not None:                       # inlined _push
+            heapq.heappush(self._events,
+                           (nxt, EVT_ARRIVAL, next(self._seq), None))
 
     def _join_window(self, t: float, req: SimRequest,
                      max_wait: float) -> None:
@@ -986,15 +1097,22 @@ class FleetSimulator:
         decode).  ``n_credit`` iterations banked by killed attempts
         shrink the device tail (replan-on-preemption)."""
         dl = math.inf
+        tracker_get = self.tracker.get
+        n_total = self.p.n_total
+        k_decode = self.p.k_decode
         for m in members:
-            d = self.tracker.get(m.request_id)
+            d = tracker_get(m.request_id)
             if d is None:
                 continue
-            tail = (m.profile.rtt
-                    + (self.p.n_total - m.assignment.n_final - m.n_credit)
-                    / m.profile.r_dev
-                    + self.p.k_decode / m.profile.r_dev)
-            dl = min(dl, d.deadline - tail)
+            prof = m.profile
+            r_dev = prof.r_dev
+            tail = (prof.rtt
+                    + (n_total - m.assignment.n_final - m.n_credit)
+                    / r_dev
+                    + k_decode / r_dev)
+            cand = d.deadline - tail
+            if cand < dl:
+                dl = cand
         return dl
 
     def _dispatch(self, t: float, members: List[SimRequest]) -> None:
@@ -1009,18 +1127,24 @@ class FleetSimulator:
         cb = self.planner.c_batch_of(b) if batched else 1.0
         deadline = self._cloud_deadline(members)
         cls = self.pool.route(t, n_final, cb, deadline)
-        service = self.pool.service_on(cls, n_final, cb)
+        # inlined route_policy.service_on -> cloud_gpu_time (same
+        # expression: n_final * batch_factor / class rate)
+        cls_rate = cls.r_cloud
+        service = n_final * cb / cls_rate
         # ACCUMULATE shares (x += y is bit-identical to x = y from the
         # 0.0 defaults): a preempted member's earlier attempts already
         # charged it for the spot time they burned
+        share = service / b
+        cls_name = cls.name
+        cost = share * cls.cost_weight
         for m in members:
             m.batched = batched
             m.batch_slowdown = cb
             m.cloud_service += service
-            m.gpu_seconds += service / b
-            m.gpu_class = cls.name
-            m.gpu_cost += (service / b) * cls.cost_weight
-            m.cloud_rate = cls.r_cloud
+            m.gpu_seconds += share
+            m.gpu_class = cls_name
+            m.gpu_cost += cost
+            m.cloud_rate = cls_rate
         job = _Job(group=n_final, members=members, service=service,
                    submitted=t, deadline=deadline, gpu_class=cls.name,
                    uid=next(self._job_uid))
@@ -1034,16 +1158,23 @@ class FleetSimulator:
             # was scheduled; the pool already forgot it and the members
             # were re-entered at kill time
             return
+        qw = job.started - job.submitted
+        n_total = self.p.n_total
+        k_decode = self.p.k_decode
+        events = self._events
+        seq = self._seq
+        push = heapq.heappush                     # inlined _push
         for m in job.members:
-            m.queue_wait += job.started - job.submitted
-            a = m.assignment
-            done = (t + m.profile.rtt
-                    + (self.p.n_total - a.n_final - m.n_credit)
-                    / m.profile.r_dev
-                    + self.p.k_decode / m.profile.r_dev)
-            self._push(done, EVT_COMPLETE, m)
+            m.queue_wait += qw
+            prof = m.profile
+            r_dev = prof.r_dev
+            done = (t + prof.rtt
+                    + (n_total - m.assignment.n_final - m.n_credit)
+                    / r_dev
+                    + k_decode / r_dev)
+            push(events, (done, EVT_COMPLETE, next(seq), m))
         for nxt, finish in self.pool.job_done(t, job):
-            self._push(finish, EVT_JOB_DONE, nxt)
+            push(events, (finish, EVT_JOB_DONE, next(seq), nxt))
 
     def _on_capacity(self, t: float, payload) -> None:
         name, k = payload
@@ -1187,7 +1318,7 @@ class FleetSimulator:
                 job_s=mean_n * cb / c.r_cloud, restart_loss=loss)
             for c in self.capacity_spec if c.preemptible}
 
-    def _on_autoscale(self, t: float) -> None:
+    def _on_autoscale(self, t: float, _payload=None) -> None:
         cfg = self.cfg
         if self.sla_ctl is not None:
             # couple the §7 controller to utilization observed since the
@@ -1201,9 +1332,15 @@ class FleetSimulator:
             self._as_last_cap_int = cap_int
             if d_cap > 0:
                 self._set_t_lim(self.sla_ctl.update(d_busy / d_cap))
-        while self._demand and self._demand[0][0] < t - cfg.horizon_s:
-            self._demand.popleft()
-        wg = group_workloads(n for _, n, _, _ in self._demand)
+        demand = self._demand
+        wg_counts = self._wg_counts
+        expire = t - cfg.horizon_s
+        while demand and demand[0][0] < expire:
+            _, n, _, _ = demand.popleft()
+            wg_counts[n] -= 1
+        # w_group = n * count from the incremental window counts:
+        # integer-exact, so it equals the full-window rescan bitwise
+        wg = {n: float(n * c) for n, c in wg_counts.items() if c > 0}
         summary = ScheduleSummary(
             name=cfg.policy, assignments=[], total_gpu_time=0.0,
             latencies=[], violations=0, group_workloads=wg)
@@ -1225,8 +1362,12 @@ class FleetSimulator:
             current=self.pool.current_counts(), horizon_s=seen,
             headroom=cfg.headroom,
             release_threshold=cfg.release_threshold,
-            demands=[(n, r_dev, rtt)
-                     for _, n, r_dev, rtt in self._demand],
+            # lazily iterated once by deadline_floors, in window order
+            # (floats must accumulate in the same order as the old
+            # materialized list); a homogeneous capacity returns before
+            # consuming it at all
+            demands=((n, r_dev, rtt)
+                     for _, n, r_dev, rtt in self._demand),
             # feasibility at the slowdown jobs actually run at: batched
             # jobs hold a slow class longer, which is what starves the
             # reserved slice under blind spot-first scaling
@@ -1252,7 +1393,16 @@ class FleetSimulator:
 
     def _on_complete(self, t: float, req: SimRequest) -> None:
         late = self.tracker.close(req.request_id, t)
+        latency = t - req.arrival
+        if self.stream is not None:
+            # streaming stats (exact_stats=False): fixed-memory counters
+            # + P² percentiles instead of a grow-forever record list (the
+            # lower-bound audit column lives only on exact records)
+            self.stream.add(latency, req.batched)
+            self._recent_lat.append(latency)
+            return
         a = req.assignment
+        prof = req.profile
         # no-queue latency floor at the rate the job actually ran (waits
         # and queues only ADD to this)
         if req.n_credit > 0:
@@ -1261,27 +1411,27 @@ class FleetSimulator:
             # iterations (banked + final) at the fastest class's solo
             # rate
             lower = e2e_latency(req.n_credit + a.n_final,
-                                req.profile.r_dev, self.p,
-                                req.profile.rtt, c_batch=1.0,
+                                prof.r_dev, self.p,
+                                prof.rtt, c_batch=1.0,
                                 r_cloud=self._fastest_rate)
         else:
-            lower = e2e_latency(a.n_final, req.profile.r_dev, self.p,
-                                req.profile.rtt,
+            lower = e2e_latency(a.n_final, prof.r_dev, self.p,
+                                prof.rtt,
                                 c_batch=req.batch_slowdown,
                                 r_cloud=req.cloud_rate or None)
         self.completed.append(CompletedRequest(
-            request_id=req.request_id, device_id=req.profile.device_id,
+            request_id=req.request_id, device_id=prof.device_id,
             arrival=req.arrival, n_final=a.n_final,
-            r_dev=req.profile.r_dev, rtt=req.profile.rtt,
+            r_dev=prof.r_dev, rtt=prof.rtt,
             batched=req.batched, window_wait=req.window_wait,
             queue_wait=req.queue_wait, cloud_service=req.cloud_service,
             gpu_seconds=req.gpu_seconds, completion=t,
-            latency=t - req.arrival, lower_bound=lower, violated=late,
+            latency=latency, lower_bound=lower, violated=late,
             gpu_class=req.gpu_class, gpu_cost=req.gpu_cost,
             preemptions=req.preemptions, n_credit=req.n_credit))
-        self._recent_lat.append(t - req.arrival)
+        self._recent_lat.append(latency)
 
-    def _on_metrics(self, t: float) -> None:
+    def _on_metrics(self, t: float, _payload=None) -> None:
         self.pool.advance(t)
         busy_int, cap_int = self.pool.snapshot_integrals()
         d_busy = busy_int - self._last_busy_int
@@ -1291,11 +1441,12 @@ class FleetSimulator:
         self._recent_lat = []
 
         def pct(q):
-            # same definition as FleetSimResult.latency_percentile, so
-            # snapshot and run-level percentiles agree
+            # same definition as FleetSimResult.latency_percentile
+            # (telemetry.latency_percentile), so snapshot and run-level
+            # percentiles agree
             if not lats:
                 return None
-            return float(np.percentile(lats, q * 100.0))
+            return latency_percentile(lats, q * 100.0)
 
         self.timeseries.append({
             "t": t,

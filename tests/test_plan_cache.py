@@ -1,0 +1,352 @@
+"""Plan memoization (core.planner.PlanCache) + the deterministic perf
+regression gate.
+
+Covers the PR-5 acceptance criteria:
+  * cached and uncached planners produce IDENTICAL PlanDecisions across
+    random profile/hint streams (the cache is an optimization, not a
+    behavior change) — fixed-case and hypothesis property.
+  * config mutations (``set_t_lim`` / ``set_capacity`` /
+    ``set_shed_policy``) bump the config epoch and invalidate — no
+    stale decisions.
+  * the fleet simulator's event trace is bit-identical with the cache
+    on vs off (fifo, EDF, heterogeneous, preemption).
+  * a deterministic CI gate: the number of closed-form solve
+    invocations for a fixed 1k-arrival trace stays under a pinned
+    ceiling (counting calls, not wall-clock, so it cannot flake).
+
+House style: plain ``_check_*`` helpers searched by hypothesis where
+installed, plus fixed cases that run everywhere.
+"""
+import hashlib
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.planner import (
+    PlanCache,
+    PlanRequest,
+    Planner,
+    ShedPolicy,
+)
+from repro.core.telemetry import DeviceProfile
+from repro.serving.fleet_sim import SimConfig, run_fleet_sim
+from repro.serving.simulator import CALIBRATED, table4_capacity
+
+
+def _digest(res):
+    sig = hashlib.sha256()
+    for c in res.completed:
+        sig.update(f"{c.request_id}:{c.completion:.12f}:{c.batched:d};"
+                   .encode())
+    return (res.n_arrivals, len(res.completed), res.violations,
+            res.total_gpu_seconds, sig.hexdigest())
+
+
+def _prof(r_dev, rtt=0.3, device_id="d"):
+    return DeviceProfile(device_id, r_dev=r_dev, rtt=rtt,
+                         k_decode=CALIBRATED.k_decode)
+
+
+def _pair(policy="variable+batching", shed=False):
+    kw = dict(policy=policy, audit=False,
+              shed_policy=ShedPolicy() if shed else None)
+    return (Planner(CALIBRATED, cache=True, **kw),
+            Planner(CALIBRATED, cache=False, **kw))
+
+
+# --------------------------------------------------------------------------
+# cached == uncached, field for field
+# --------------------------------------------------------------------------
+def _check_cached_matches_uncached(r_devs, rtts, hints, policy, shed):
+    cached, plain = _pair(policy=policy, shed=shed)
+    for r_dev in r_devs:
+        for rtt in rtts:
+            for qh, uh in hints:
+                req = PlanRequest(device=_prof(r_dev, rtt),
+                                  queue_delay_hint=qh,
+                                  utilization_hint=uh)
+                a, b = cached.plan(req), plain.plan(req)
+                assert a.to_json() == b.to_json(), (
+                    f"cache drift at r_dev={r_dev} rtt={rtt} "
+                    f"qh={qh} uh={uh}")
+                aa, bb = a.assignment(), b.assignment()
+                assert (aa.device_id, aa.n_final, aa.n_exact,
+                        aa.latency, aa.feasible) == \
+                    (bb.device_id, bb.n_final, bb.n_exact,
+                     bb.latency, bb.feasible)
+    assert cached.cache.hits > 0          # the grid revisits profiles
+
+
+_HINT_GRID = [(0.0, 0.0), (0.0, 1.0), (2.0, 0.5), (30.0, 1.0),
+              (0.2, 0.96), (7.0, 0.0)]
+
+
+@pytest.mark.parametrize("policy,shed", [
+    ("variable+batching", False),
+    ("variable+batching", True),
+    ("variable", True),
+    ("all_cloud", False),
+])
+def test_cached_matches_uncached_fixed(policy, shed):
+    _check_cached_matches_uncached(
+        (1.5, 2.25, 3.0, 8.0, 50.0), (0.1, 0.3), _HINT_GRID,
+        policy, shed)
+
+
+@given(r_dev=st.floats(0.3, 60.0), rtt=st.floats(0.0, 2.0),
+       qh=st.floats(0.0, 40.0), uh=st.floats(0.0, 1.0),
+       shed=st.booleans())
+@settings(max_examples=80, deadline=None)
+def test_cached_matches_uncached_property(r_dev, rtt, qh, uh, shed):
+    # revisit each random point twice so the second pass is a cache hit
+    _check_cached_matches_uncached(
+        (r_dev, r_dev), (rtt,), [(qh, uh), (0.0, 0.0), (qh, uh)],
+        "variable+batching", shed)
+
+
+def test_cache_shares_decisions_across_repeat_profiles():
+    """The hot paths: identical (profile, hints) returns the SAME
+    decision object; hints beyond the admission slack share the denial
+    decision; distinct device_ids never leak across."""
+    planner, _ = _pair()
+    p1 = _prof(2.25)
+    d1 = planner.plan_profile(p1, 0.0, 0.0)
+    d2 = planner.plan_profile(p1, 0.0, 0.0)
+    assert d2 is d1                        # last-decision fast path
+    big1 = planner.plan_profile(p1, 50.0, 0.0)
+    big2 = planner.plan_profile(p1, 60.0, 0.0)
+    assert big2 is big1                    # shared denial decision
+    assert big1.batch_admit is False and big1.batch_max_wait == 0.0
+    other = planner.plan_profile(_prof(2.25, device_id="e"), 0.0, 0.0)
+    assert other.assignment().device_id == "e"
+    assert d1.assignment().device_id == "d"
+
+
+# --------------------------------------------------------------------------
+# invalidation: epoch bumps on every decision-relevant mutation
+# --------------------------------------------------------------------------
+def test_set_t_lim_invalidates_cached_plans():
+    cached, _ = _pair()
+    before = cached.plan(PlanRequest(device=_prof(2.25)))
+    assert cached.config_epoch == 0
+    cached.set_t_lim(12.0)
+    assert cached.config_epoch == 1
+    after = cached.plan(PlanRequest(device=_prof(2.25)))
+    fresh = Planner(CALIBRATED, policy="variable+batching", audit=False,
+                    cache=False)
+    fresh.set_t_lim(12.0)
+    want = fresh.plan(PlanRequest(device=_prof(2.25)))
+    assert after.to_json() == want.to_json()
+    assert after.n_final < before.n_final      # relaxed SLA: less cloud
+    # reverting also re-solves (epoch monotone, not value-compared)
+    cached.set_t_lim(CALIBRATED.t_lim)
+    assert cached.config_epoch == 2
+    again = cached.plan(PlanRequest(device=_prof(2.25)))
+    assert again.to_json() == before.to_json()
+
+
+def test_set_capacity_and_shed_policy_bump_epoch():
+    planner, _ = _pair()
+    planner.plan(PlanRequest(device=_prof(2.25)))
+    m0 = planner.cache.misses
+    planner.set_capacity(table4_capacity())
+    assert planner.config_epoch == 1
+    assert planner.route_policy is not None
+    planner.plan(PlanRequest(device=_prof(2.25)))   # stale entry: miss
+    assert planner.cache.misses == m0 + 1
+    planner.set_shed_policy(ShedPolicy(queue_high=0.5, util_high=0.9))
+    assert planner.config_epoch == 2
+    # the new shed policy is live immediately — no stale "admit"
+    d = planner.plan(PlanRequest(device=_prof(5.0),
+                                 queue_delay_hint=30.0,
+                                 utilization_hint=1.0))
+    assert d.action == "degrade-to-local"
+    planner.set_shed_policy(None)
+    assert planner.config_epoch == 3
+    d2 = planner.plan(PlanRequest(device=_prof(5.0),
+                                  queue_delay_hint=30.0,
+                                  utilization_hint=1.0))
+    assert d2.action == "admit"
+
+
+def test_cache_eviction_and_stats():
+    cache = PlanCache(max_entries=4)
+    planner = Planner(CALIBRATED, policy="variable+batching",
+                      audit=False, cache=cache)
+    for i in range(10):
+        planner.plan_profile(_prof(1.5 + 0.1 * i), 0.0, 0.0)
+    assert len(cache) <= 4
+    assert cache.misses == 10 and cache.hits == 0
+    planner.plan_profile(_prof(1.5 + 0.9), 0.0, 0.0)   # still resident
+    assert cache.hits == 1
+    assert 0.0 < cache.hit_rate() < 1.0
+    cache.clear()
+    assert len(cache) == 0
+    with pytest.raises(ValueError):
+        PlanCache(max_entries=0)
+
+
+def test_cache_quanta_buckets_continuous_fields():
+    """Approximate mode (opt-in): nearby telemetry buckets to one key;
+    exact mode keys every distinct float separately."""
+    exact = PlanCache()
+    approx = PlanCache(quanta=(1.0, 0.1, 1e9))
+    a, b = _prof(2.249), _prof(2.251)
+    # the exact-key contract Planner.plan_profile inlines — lockstep pin
+    assert exact.key_for(a) == (a.r_dev, a.rtt, a.bandwidth,
+                                a.k_decode, a.has_accelerator)
+    assert exact.key_for(a) != exact.key_for(b)
+    assert approx.key_for(a) == approx.key_for(b)
+    # and the planner actually reuses the bucketed entry
+    planner = Planner(CALIBRATED, policy="variable+batching",
+                      audit=False, cache=approx)
+    planner.plan_profile(a, 0.0, 0.0)
+    planner.plan_profile(b, 0.0, 0.0)
+    assert approx.hits == 1 and approx.misses == 1
+
+
+def test_audited_planner_bypasses_cache():
+    """Audit mode embeds per-request payloads; those decisions are
+    never shared or served from the cache."""
+    planner = Planner(CALIBRATED, policy="variable+batching", cache=True)
+    d1 = planner.plan(PlanRequest(device=_prof(2.25), request_id="a"))
+    d2 = planner.plan(PlanRequest(device=_prof(2.25), request_id="b"))
+    assert d1.request["request_id"] == "a"
+    assert d2.request["request_id"] == "b"
+    assert planner.cache.hits == 0 and planner.cache.misses == 0
+
+
+# --------------------------------------------------------------------------
+# fleet simulator: cache on == cache off, bit for bit
+# --------------------------------------------------------------------------
+def _check_sim_cache_invariant(seed, dispatch, hetero, preempt):
+    # a small fleet so the cycle sampler revisits profiles within the
+    # run (the default Table-4 fleet has 1000 distinct devices — more
+    # than these short traces arrive)
+    fleet = [DeviceProfile(f"d{i}", r_dev=r, k_decode=CALIBRATED.k_decode)
+             for i, r in enumerate((1.7, 2.0, 2.25, 2.4, 2.6, 3.0))]
+    kw = dict(policy="variable+batching", rate=15.0, duration=40.0,
+              seed=seed, dispatch=dispatch, metrics_interval_s=10.0,
+              fleet=fleet)
+    if hetero:
+        kw.update(capacity=table4_capacity(base_count=6, spot_count=10,
+                                           base_max=12, spot_max=24),
+                  process="diurnal", diurnal_period_s=40.0)
+    else:
+        kw.update(gpus_init=10, max_gpus=32)
+    if preempt:
+        kw.update(capacity=table4_capacity(base_count=6, spot_count=10,
+                                           base_max=12, spot_max=24),
+                  preempt_rate=0.05, shedding=True)
+    on = run_fleet_sim(SimConfig(plan_cache=True, **kw))
+    off = run_fleet_sim(SimConfig(plan_cache=False, **kw))
+    assert _digest(on) == _digest(off)
+    assert on.plan_cache_hits > 0 and off.plan_cache_hits == 0
+
+
+@pytest.mark.parametrize("dispatch,hetero,preempt", [
+    ("fifo", False, False),
+    ("edf", False, False),
+    ("edf", True, False),
+    ("edf", False, True),
+])
+def test_sim_cache_invariant_fixed(dispatch, hetero, preempt):
+    _check_sim_cache_invariant(7, dispatch, hetero, preempt)
+
+
+@given(seed=st.integers(0, 10), dispatch=st.sampled_from(["fifo", "edf"]),
+       hetero=st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_sim_cache_invariant_property(seed, dispatch, hetero):
+    _check_sim_cache_invariant(seed, dispatch, hetero, False)
+
+
+def test_golden_trace_with_cache_enabled():
+    """The PR-4 golden trace, default config (cache ON by default):
+    expected dict copied verbatim from tests/test_fleet_sim.py."""
+    cfg = SimConfig(policy="variable+batching", rate=12.0, duration=40.0,
+                    seed=7, gpus_init=10, max_gpus=32,
+                    metrics_interval_s=10.0)
+    assert cfg.plan_cache and cfg.exact_stats      # the default config
+    res = run_fleet_sim(cfg)
+    sig = hashlib.sha256()
+    for c in res.completed:
+        sig.update(f"{c.request_id}:{c.completion:.9f}:{c.batched:d};"
+                   .encode())
+    assert {
+        "n_arrivals": res.n_arrivals,
+        "n_completed": len(res.completed),
+        "violations": res.violations,
+        "gpu_seconds": round(res.total_gpu_seconds, 9),
+        "p99": round(res.latency_percentile(99), 9),
+        "digest": sig.hexdigest()[:16],
+    } == {
+        "n_arrivals": 490,
+        "n_completed": 490,
+        "violations": 0,
+        "gpu_seconds": 249.312,
+        "p99": 8.4873321,
+        "digest": "af766f3924e39378",
+    }
+    # 490 arrivals over a 1000-device cycle: no profile repeats yet, so
+    # every plan is a (correct) miss — hits need fleet-scale traces
+    assert res.plan_calls == 490
+    assert res.plan_cache_misses == 490
+
+
+# --------------------------------------------------------------------------
+# the deterministic perf-regression gate (CI fast tier)
+# --------------------------------------------------------------------------
+#: Ceiling on closed-form solve invocations for the pinned 1k-arrival
+#: trace below.  The fleet has 50 distinct profiles and hints stay at
+#: zero (warm fixed pool), so the memoized planner must solve ~once per
+#: profile; the pre-cache planner solved once per ARRIVAL (~1000).
+#: Regressing the cache (key too wide, epoch bumped spuriously, entry
+#: dropped) blows past this deterministically — no wall-clock involved.
+SOLVE_CEILING = 150
+
+
+def _gate_cfg(plan_cache=True):
+    fleet = [DeviceProfile(f"d{i}", r_dev=1.6 + 0.02 * i,
+                           k_decode=CALIBRATED.k_decode)
+             for i in range(50)]
+    return SimConfig(policy="variable+batching", rate=50.0,
+                     duration=20.0, seed=3, fleet=fleet, gpus_init=64,
+                     max_gpus=64, autoscale=False,
+                     plan_cache=plan_cache)
+
+
+def test_perf_gate_memoized_solve_count(monkeypatch):
+    import repro.core.scheduler as sched
+    calls = {"n": 0}
+    inner = sched.solve_n_cloud_cached
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return inner(*a, **kw)
+
+    monkeypatch.setattr(sched, "solve_n_cloud_cached", counting)
+    res = run_fleet_sim(_gate_cfg(plan_cache=True))
+    assert res.n_arrivals >= 900          # the trace is fleet-sized
+    assert res.plan_cache_misses == calls["n"]
+    assert calls["n"] <= SOLVE_CEILING, (
+        f"memoized planner ran {calls['n']} closed-form solves for "
+        f"{res.n_arrivals} arrivals (ceiling {SOLVE_CEILING}): the "
+        f"plan cache regressed")
+    # the gate is meaningful: without the cache the same trace re-solves
+    # per arrival
+    calls["n"] = 0
+    off = run_fleet_sim(_gate_cfg(plan_cache=False))
+    assert calls["n"] == off.n_arrivals > SOLVE_CEILING
+    assert _digest(res) == _digest(off)
+
+
+def test_result_counters_surface_cache_stats():
+    res = run_fleet_sim(_gate_cfg())
+    assert res.plan_calls == res.n_arrivals
+    assert res.plan_cache_hits + res.plan_cache_misses == res.plan_calls
+    payload = res.to_json()
+    for key in ("n_events", "plan_calls", "plan_cache_hits",
+                "plan_cache_hit_rate", "exact_stats"):
+        assert key in payload
+    assert payload["n_events"] == res.n_events > res.n_arrivals

@@ -1,0 +1,168 @@
+"""Streaming telemetry: the P² quantile estimator, the shared
+percentile helper, and the fleet simulator's fixed-memory stats mode.
+
+Covers the PR-5 acceptance criteria:
+  * one percentile definition (``telemetry.latency_percentile``) shared
+    by run-level results and per-snapshot metrics — np.percentile
+    semantics, NaN on empty.
+  * P² tracks quantiles of large streams within a fraction of a
+    percent of the exact sample quantile, in O(1) memory.
+  * ``exact_stats=False`` changes ONLY stats storage: same arrivals,
+    violations, GPU-seconds, and event count as the exact run, with
+    ``completed`` left empty.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.telemetry import (
+    P2Quantile,
+    StreamingLatencyStats,
+    latency_percentile,
+)
+from repro.serving.fleet_sim import SimConfig, run_fleet_sim
+
+
+# --------------------------------------------------------------------------
+# the shared percentile definition
+# --------------------------------------------------------------------------
+def test_latency_percentile_matches_numpy_and_handles_empty():
+    xs = [3.0, 1.0, 2.0, 10.0, 4.0]
+    for q in (0.0, 50.0, 99.0, 100.0):
+        assert latency_percentile(xs, q) == float(np.percentile(xs, q))
+    assert math.isnan(latency_percentile([], 99.0))
+
+
+def test_result_and_snapshot_percentiles_share_definition():
+    """The run-level p99 equals the helper over the completed latencies
+    (pre-PR these were two separate np.percentile call sites with 0-100
+    vs 0-1 conventions)."""
+    res = run_fleet_sim(SimConfig(policy="variable+batching", rate=12.0,
+                                  duration=30.0, seed=1, gpus_init=10))
+    lats = [c.latency for c in res.completed]
+    assert res.latency_percentile(99) == latency_percentile(lats, 99.0)
+    snap = next(s for s in res.timeseries if s["p99_latency"] is not None)
+    assert snap["p99_latency"] >= snap["p50_latency"]
+
+
+# --------------------------------------------------------------------------
+# P² estimator
+# --------------------------------------------------------------------------
+def _check_p2_accuracy(seed, q, n, dist):
+    rng = np.random.default_rng(seed)
+    xs = (rng.lognormal(1.0, 0.5, n) if dist == "lognormal"
+          else rng.uniform(0.0, 10.0, n))
+    est = P2Quantile(q)
+    for x in xs:
+        est.add(float(x))
+    exact = float(np.percentile(xs, q * 100.0))
+    spread = float(np.percentile(xs, 99.5)) - float(np.percentile(xs, 0.5))
+    assert abs(est.value() - exact) <= 0.05 * spread, (
+        f"P2 q={q} estimate {est.value():.4f} vs exact {exact:.4f}")
+    assert est.n == n
+
+
+@pytest.mark.parametrize("q,dist", [(0.5, "lognormal"), (0.99, "lognormal"),
+                                    (0.9, "uniform")])
+def test_p2_accuracy_fixed(q, dist):
+    _check_p2_accuracy(seed=1, q=q, n=20000, dist=dist)
+
+
+@given(seed=st.integers(0, 50), q=st.sampled_from([0.5, 0.9, 0.99]),
+       dist=st.sampled_from(["lognormal", "uniform"]))
+@settings(max_examples=15, deadline=None)
+def test_p2_accuracy_property(seed, q, dist):
+    _check_p2_accuracy(seed, q, 5000, dist)
+
+
+def test_p2_small_streams_are_exact():
+    est = P2Quantile(0.5)
+    assert math.isnan(est.value())
+    for i, x in enumerate([5.0, 1.0, 3.0]):
+        est.add(x)
+    assert est.value() == 3.0             # exact sample median
+    with pytest.raises(ValueError):
+        P2Quantile(0.0)
+    with pytest.raises(ValueError):
+        P2Quantile(1.0)
+
+
+def test_p2_memory_is_fixed():
+    """Five markers, whatever the stream length."""
+    est = P2Quantile(0.99)
+    for i in range(50000):
+        est.add(float(i % 997))
+    assert len(est._heights) == 5
+
+
+# --------------------------------------------------------------------------
+# StreamingLatencyStats
+# --------------------------------------------------------------------------
+def test_streaming_stats_counters_and_tracked_quantiles():
+    s = StreamingLatencyStats()
+    rng = np.random.default_rng(0)
+    xs = rng.exponential(2.0, 3000)
+    for i, x in enumerate(xs):
+        s.add(float(x), batched=i % 3 == 0)
+    assert s.count == 3000 and s.batched == 1000
+    assert s.max == float(max(xs))
+    assert abs(s.mean() - float(np.mean(xs))) < 1e-9
+    assert s.quantiles() == [50.0, 99.0]
+    for q in (50.0, 99.0):
+        exact = float(np.percentile(xs, q))
+        assert abs(s.percentile(q) - exact) / exact < 0.1
+    with pytest.raises(ValueError, match="track only"):
+        s.percentile(95.0)
+
+
+# --------------------------------------------------------------------------
+# exact vs streaming fleet runs: same dynamics, different storage
+# --------------------------------------------------------------------------
+def _check_stream_matches_exact(seed, rate, dispatch):
+    kw = dict(policy="variable+batching", rate=rate, duration=40.0,
+              seed=seed, gpus_init=12, max_gpus=64, dispatch=dispatch)
+    exact = run_fleet_sim(SimConfig(exact_stats=True, **kw))
+    stream = run_fleet_sim(SimConfig(exact_stats=False, **kw))
+    assert stream.completed == []
+    assert stream.stream is not None and exact.stream is None
+    assert stream.n_completed() == len(exact.completed) > 0
+    assert stream.n_arrivals == exact.n_arrivals
+    assert stream.violations == exact.violations
+    assert stream.n_events == exact.n_events
+    assert stream.total_gpu_seconds == exact.total_gpu_seconds
+    assert stream.total_gpu_cost == exact.total_gpu_cost
+    assert stream.batched_fraction() == exact.batched_fraction()
+    # percentiles are P² estimates: close, not exact
+    for q in (50, 99):
+        e = exact.latency_percentile(q)
+        assert abs(stream.latency_percentile(q) - e) <= 0.05 * max(e, 1.0)
+    # per-snapshot percentiles stay exact in both modes (the window
+    # lists are bounded and reset each snapshot)
+    for se, ss in zip(exact.timeseries, stream.timeseries):
+        assert se["p99_latency"] == ss["p99_latency"]
+        assert se["completed"] == ss["completed"]
+    payload = stream.to_json()
+    assert payload["exact_stats"] is False
+    assert payload["n_completed"] == stream.n_completed()
+
+
+@pytest.mark.parametrize("rate,dispatch", [(12.0, "fifo"), (25.0, "edf")])
+def test_stream_matches_exact_fixed(rate, dispatch):
+    _check_stream_matches_exact(seed=7, rate=rate, dispatch=dispatch)
+
+
+@given(seed=st.integers(0, 10), rate=st.floats(5.0, 30.0),
+       dispatch=st.sampled_from(["fifo", "edf"]))
+@settings(max_examples=8, deadline=None)
+def test_stream_matches_exact_property(seed, rate, dispatch):
+    _check_stream_matches_exact(seed, rate, dispatch)
+
+
+def test_streaming_untracked_percentile_raises():
+    res = run_fleet_sim(SimConfig(policy="variable", rate=10.0,
+                                  duration=10.0, seed=0, gpus_init=8,
+                                  exact_stats=False))
+    with pytest.raises(ValueError, match="exact_stats=True"):
+        res.latency_percentile(95)
