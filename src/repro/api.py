@@ -64,6 +64,12 @@ from repro.serving.fleet_sim import (  # noqa: F401
     SimConfig,
     run_fleet_sim,
 )
+from repro.serving.replay import (  # noqa: F401
+    Trace,
+    read_trace,
+    replay_through_engine,
+    verify_decisions,
+)
 from repro.serving.simulator import (  # noqa: F401
     CALIBRATED,
     fleet_sim_table4,
@@ -92,6 +98,9 @@ __all__ = [
     "DeviceProfile", "generate_fleet", "FleetSimResult", "SimConfig",
     "run_fleet_sim", "CALIBRATED", "fleet_sim_table4", "run_table4",
     "table4_capacity", "table4_fleet",
+    # engine-in-the-loop trace replay (docs/engine_replay.md; the
+    # engine-executing half lazily imports jax inside the call)
+    "Trace", "read_trace", "verify_decisions", "replay_through_engine",
     # coordinator-side fault tolerance (jax-free; the training loop
     # itself stays a direct repro.train import)
     "HeartbeatMonitor", "StragglerDetector", "plan_elastic_mesh",

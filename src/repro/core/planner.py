@@ -190,6 +190,19 @@ class PlanRequest:
 # --------------------------------------------------------------------------
 # Decision side
 # --------------------------------------------------------------------------
+#: The audit-invariant VALUE subset of a PlanDecision that trace records
+#: carry (serving.replay).  Deliberately excludes ``gpu_class`` /
+#: ``cloud_rate`` (advisory routing runs only in audit mode, so they
+#: differ between a hot-loop recording and an audited re-derivation) and
+#: the audit payloads (``trace``/``request``/``planner`` — the trace
+#: header carries the config once instead of per decision).  Everything
+#: here is pinned value-identical across audit modes and across the
+#: cached/uncached paths, which is what makes field-exact replay
+#: verification possible.
+TRACE_FIELDS = ("n_exact", "n_final", "latency", "feasible", "gpu_time",
+                "batch_admit", "batch_max_wait", "t_lim", "action")
+
+
 @dataclasses.dataclass
 class PlanDecision:
     """One decision out: everything every consumer needs, plus the
@@ -251,6 +264,12 @@ class PlanDecision:
     @classmethod
     def from_json(cls, d: Mapping[str, Any]) -> "PlanDecision":
         return cls(**{k: v for k, v in d.items() if k != "_assignment"})
+
+    def to_trace_json(self) -> Dict[str, Any]:
+        """The compact audit-invariant value record a replay trace
+        stores per decision (see TRACE_FIELDS for what is excluded and
+        why) — shared by audited and hot-loop decisions alike."""
+        return {k: getattr(self, k) for k in TRACE_FIELDS}
 
     def replay(self) -> "PlanDecision":
         """Rebuild the planner from the embedded config and re-plan the

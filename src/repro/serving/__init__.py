@@ -1,6 +1,7 @@
 """serving subpackage: static Table-4 snapshot (``simulator``), real
-split-execution engines (``engine``), and the event-driven continuous
-simulator (``fleet_sim``)."""
+split-execution engines (``engine``), the event-driven continuous
+simulator (``fleet_sim``), and the decision-trace record/verify/replay
+bridge between them (``replay``, docs/engine_replay.md)."""
 from repro.serving.fleet_sim import (  # noqa: F401
     FleetSimResult,
     FleetSimulator,
@@ -8,6 +9,13 @@ from repro.serving.fleet_sim import (  # noqa: F401
     HeterogeneousDispatcher,
     SimConfig,
     run_fleet_sim,
+)
+from repro.serving.replay import (  # noqa: F401
+    Trace,
+    TraceWriter,
+    read_trace,
+    replay_through_engine,
+    verify_decisions,
 )
 from repro.serving.simulator import (  # noqa: F401
     CALIBRATED,

@@ -202,6 +202,13 @@ class SimConfig:
     #: decisions — see core.planner.PlanCache; False re-runs the full
     #: pipeline per arrival, the pre-cache behavior)
     plan_cache: bool = True
+    #: write a structured JSONL decision trace here (serving.replay):
+    #: one header record (planner config + sim metadata), then one
+    #: record per plan / replan / dispatch / preempt.  The sink is
+    #: write-only — event dynamics with trace_out set are bit-identical
+    #: to the default None (the golden-trace anchor; pinned in
+    #: tests/test_engine_replay.py).
+    trace_out: Optional[str] = None
 
     def build_capacity(self) -> CloudCapacity:
         if self.capacity is not None:
@@ -918,6 +925,22 @@ class FleetSimulator:
         self.n_rejected = 0
         self.n_degraded = 0
         self.n_replans = 0
+        # structured decision trace (serving.replay): every write is
+        # behind `if self._trace is not None`, so the default path adds
+        # one predictable branch per hook and no allocation
+        self._trace = None
+        if cfg.trace_out:
+            from repro.serving.replay import TraceWriter
+            self._trace = TraceWriter(
+                cfg.trace_out, self.planner.config_json(),
+                {"seed": cfg.seed, "policy": cfg.policy,
+                 "process": cfg.process, "rate": cfg.rate,
+                 "duration": cfg.duration, "batch_size": cfg.batch_size,
+                 "window_s": cfg.window_s, "dispatch": cfg.dispatch,
+                 "preempt_rate": cfg.preempt_rate,
+                 "preempt_requeue": cfg.preempt_requeue,
+                 "shedding": cfg.shedding,
+                 "adaptive_sla": cfg.adaptive_sla})
 
     # -- event plumbing ----------------------------------------------------
     def _push(self, t: float, kind: int, payload=None) -> None:
@@ -969,6 +992,8 @@ class FleetSimulator:
         # the heap drained, so pops == pushes: the push ordinal counter
         # IS the processed-event count
         self.n_events = next(self._seq)
+        if self._trace is not None:
+            self._trace.close()
 
         # integrate through the final event so the trailing idle window
         # (device tails after the last cloud job) counts toward the mean
@@ -1017,8 +1042,11 @@ class FleetSimulator:
         if self.planner.shed_policy is not None:
             cap_now = self.pool.total_capacity
             util_hint = self.pool.total_busy / cap_now if cap_now else 1.0
-        decision = self.planner.plan_profile(
-            prof, self._queue_delay(), util_hint)
+        qd_hint = self._queue_delay()
+        decision = self.planner.plan_profile(prof, qd_hint, util_hint)
+        if self._trace is not None:
+            self._trace.plan(t, rid, dataclasses.asdict(prof), qd_hint,
+                             util_hint, decision)
         if decision.action == "reject":
             # shed at admission: refused up front (no deadline opens, no
             # demand recorded — the autoscaler must not size for it)
@@ -1145,6 +1173,10 @@ class FleetSimulator:
             m.gpu_class = cls_name
             m.gpu_cost += cost
             m.cloud_rate = cls_rate
+        if self._trace is not None:
+            self._trace.dispatch(t, n_final,
+                                 [m.request_id for m in members], cb,
+                                 cls_name, cls_rate, service, deadline)
         job = _Job(group=n_final, members=members, service=service,
                    submitted=t, deadline=deadline, gpu_class=cls.name,
                    uid=next(self._job_uid))
@@ -1223,6 +1255,10 @@ class FleetSimulator:
             # evict and re-route through the same requeue path.  Queued
             # jobs never started, so their members are refunded in full.
             killed += pool.evict_queue(t)
+        if self._trace is not None:
+            # before the requeue, so the preempt record precedes the
+            # replan/dispatch records it causes (file order = causality)
+            self._trace.preempt(t, pool.gpu_class.name, k, len(killed))
         self._requeue_killed(t, killed)
 
     def _requeue_killed(self, t: float, killed: List[_Job]) -> None:
@@ -1274,11 +1310,17 @@ class FleetSimulator:
             m.n_credit += n_done
             d = self.tracker.get(m.request_id)
             time_left = (d.deadline - t) if d is not None else 0.0
+            qd_hint = self.pool.queue_delay_estimate()
             decision = self.planner.replan_preempted(
                 PlanRequest(
                     device=m.profile, request_id=m.request_id,
-                    queue_delay_hint=self.pool.queue_delay_estimate()),
+                    queue_delay_hint=qd_hint),
                 n_done=m.n_credit, time_left=time_left)
+            if self._trace is not None:
+                self._trace.replan(t, m.request_id,
+                                   dataclasses.asdict(m.profile),
+                                   m.n_credit, time_left, qd_hint,
+                                   decision)
             m.assignment = decision.assignment()
             self.n_replans += 1
             if m.assignment.n_final <= 0:

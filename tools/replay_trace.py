@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Record and replay fleet-sim decision traces through the real engine.
+
+Three subcommands (see docs/engine_replay.md for the trace schema):
+
+  record   run a fleet simulation with SimConfig.trace_out set and write
+           the JSONL decision trace
+  verify   rebuild the planner from the trace header and re-derive every
+           recorded plan/replan decision; exit non-zero on any mismatch
+  replay   execute the trace's dispatch records through a real
+           DiffusionSplitEngine executable cache (reduced config) and
+           print the measured-vs-modeled reconciliation report
+
+Examples:
+    PYTHONPATH=src python tools/replay_trace.py record --out trace.jsonl \
+        --rate 12 --duration 40 --seed 7
+    PYTHONPATH=src python tools/replay_trace.py verify trace.jsonl
+    PYTHONPATH=src python tools/replay_trace.py replay trace.jsonl \
+        --max-records 50
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def cmd_record(args):
+    from repro.serving.fleet_sim import SimConfig, run_fleet_sim
+    cfg = SimConfig(seed=args.seed, rate=args.rate,
+                    duration=args.duration, policy=args.policy,
+                    gpus_init=args.gpus_init, max_gpus=args.max_gpus,
+                    preempt_rate=args.preempt_rate,
+                    shedding=args.shedding,
+                    adaptive_sla=args.adaptive_sla,
+                    trace_out=args.out)
+    res = run_fleet_sim(cfg)
+    from repro.serving.replay import read_trace
+    trace = read_trace(args.out)
+    print(f"wrote {args.out}: {len(trace.records)} records "
+          f"({len(trace.plans())} plans, {len(trace.replans())} replans, "
+          f"{len(trace.dispatches())} dispatches, "
+          f"{len(trace.preempts())} preempts) "
+          f"from {res.n_arrivals} arrivals")
+    return 0
+
+
+def cmd_verify(args):
+    from repro.serving.replay import read_trace, verify_decisions
+    report = verify_decisions(read_trace(args.trace))
+    print(json.dumps(report.to_json(), indent=1))
+    return 0 if report.ok else 1
+
+
+def cmd_replay(args):
+    from repro.serving.replay import read_trace, replay_through_engine
+    report = replay_through_engine(
+        read_trace(args.trace), max_records=args.max_records,
+        tolerance=args.tolerance, seed=args.seed)
+    d = report.to_json()
+    if not args.groups:
+        del d["groups"]
+    print(json.dumps(d, indent=1))
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    rec = sub.add_parser("record", help="run a traced fleet simulation")
+    rec.add_argument("--out", default="fleet_trace.jsonl")
+    rec.add_argument("--seed", type=int, default=7)
+    rec.add_argument("--rate", type=float, default=12.0)
+    rec.add_argument("--duration", type=float, default=40.0)
+    rec.add_argument("--policy", default="variable+batching")
+    rec.add_argument("--gpus-init", type=int, default=10)
+    rec.add_argument("--max-gpus", type=int, default=32)
+    rec.add_argument("--preempt-rate", type=float, default=0.0)
+    rec.add_argument("--shedding", action="store_true")
+    rec.add_argument("--adaptive-sla", action="store_true")
+    rec.set_defaults(fn=cmd_record)
+
+    ver = sub.add_parser("verify", help="re-derive recorded decisions")
+    ver.add_argument("trace")
+    ver.set_defaults(fn=cmd_verify)
+
+    rep = sub.add_parser("replay", help="execute dispatches on the engine")
+    rep.add_argument("trace")
+    rep.add_argument("--max-records", type=int, default=None,
+                     help="cap on dispatch records executed (default all)")
+    rep.add_argument("--tolerance", type=float, default=0.75)
+    rep.add_argument("--seed", type=int, default=0)
+    rep.add_argument("--groups", action="store_true",
+                     help="include the per-group table in the output")
+    rep.set_defaults(fn=cmd_replay)
+
+    args = ap.parse_args()
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
