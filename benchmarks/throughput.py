@@ -47,7 +47,10 @@ from repro.serving.fleet_sim import SimConfig, run_fleet_sim
 CELL = dict(policy="variable+batching", seed=0, rate=10000.0,
             gpus_init=4000, max_gpus=8192, autoscale_interval_s=1.0)
 
-SIZES = {"1e4": 1.0, "1e5": 10.0, "1e6": 100.0}   # label -> duration_s
+#: label -> duration_s.  1e7 runs on the v2 core only (v1 at 1e7 is a
+#: ~10 minute cell; the v2 target is "completes in about a minute").
+SIZES = {"1e4": 1.0, "1e5": 10.0, "1e6": 100.0, "1e7": 1000.0}
+V1_SIZES = ["1e4", "1e5", "1e6"]
 
 #: Pre-PR wall clock of the exact same cells (same SimConfig, same
 #: seed, bit-identical event trace — violations / gpu_seconds recorded
@@ -87,19 +90,20 @@ def _peak_rss_mb():
 
 
 def run_cell(duration: float, plan_cache: bool, exact_stats: bool,
-             reps: int = 2):
+             reps: int = 2, core: str = "v1"):
     """Best-of-``reps`` wall clock for one (size, config) cell."""
     best, res = None, None
     rss_before = _vmrss_mb()
     for _ in range(reps):
         cfg = SimConfig(duration=duration, plan_cache=plan_cache,
-                        exact_stats=exact_stats, **CELL)
+                        exact_stats=exact_stats, core=core, **CELL)
         gc.collect()
         t0 = time.perf_counter()
         res = run_fleet_sim(cfg)
         wall = time.perf_counter() - t0
         best = wall if best is None else min(best, wall)
     return {
+        "core": core,
         "plan_cache": plan_cache,
         "exact_stats": exact_stats,
         "arrivals": res.n_arrivals,
@@ -155,8 +159,8 @@ def plan_microbench(n: int = 30000):
     return out
 
 
-def bench(smoke: bool = False):
-    sizes = ["1e4"] if smoke else list(SIZES)
+def bench(smoke: bool = False, core: str = "v1"):
+    sizes = ["1e4"] if smoke else V1_SIZES
     t0 = time.perf_counter()
     cells = {}
     for label in sizes:                        # smallest first: RSS story
@@ -164,17 +168,19 @@ def bench(smoke: bool = False):
         reps = 1 if label == "1e6" else 2
         cells[label] = {"duration_s": duration,
                         "optimized": run_cell(duration, True, False,
-                                              reps=reps)}
+                                              reps=reps, core=core)}
         if label != "1e6":                     # exact 1e6 is the old OOM
             cells[label]["legacy_config"] = run_cell(
-                duration, plan_cache=False, exact_stats=True, reps=reps)
+                duration, plan_cache=False, exact_stats=True, reps=reps,
+                core=core)
     speedups = {}
     for label, cell in cells.items():
         base = PRE_PR_BASELINE["cells"].get(label, {})
         opt = cell["optimized"]
-        if base.get("wall_s"):
+        if base.get("wall_s") and core == "v1":
             # same trace (asserted via violations/gpu_seconds match), so
-            # the events/sec ratio is exactly the wall ratio
+            # the events/sec ratio is exactly the wall ratio.  v2 draws
+            # its own arrival rng stream, so the check only pins v1.
             trace_match = (base["violations"] == opt["violations"]
                            and abs(base["gpu_seconds"]
                                    - opt["gpu_seconds"]) < 1.0)
@@ -186,9 +192,23 @@ def bench(smoke: bool = False):
         if "legacy_config" in cell:
             speedups.setdefault(label, {})["events_per_s_vs_legacy_config"] \
                 = round(cell["legacy_config"]["wall_s"] / opt["wall_s"], 2)
+    if not smoke and core == "v1":
+        # v2-core cells: pinned v1-vs-v2 speedup at 1e6 (both cores run
+        # the same cell config this session) and the 1e7 sweep that only
+        # the v2 core completes in bench-able time.
+        v2_1e6 = run_cell(SIZES["1e6"], True, False, reps=1, core="v2")
+        cells["1e6"]["core_v2"] = v2_1e6
+        speedups.setdefault("1e6", {})["v2_vs_v1_events_per_s"] = round(
+            v2_1e6["events_per_s"] / cells["1e6"]["optimized"]
+            ["events_per_s"], 2)
+        v2_1e7 = run_cell(SIZES["1e7"], True, False, reps=1, core="v2")
+        cells["1e7"] = {"duration_s": SIZES["1e7"], "core_v2": v2_1e7}
+        speedups["1e7"] = {"v2_wall_s": v2_1e7["wall_s"],
+                           "v2_events_per_s": v2_1e7["events_per_s"]}
     return {
         "bench": "throughput",
         "smoke": smoke,
+        "core": core,
         "cell_config": {k: v for k, v in CELL.items()},
         "wall_s": round(time.perf_counter() - t0, 2),
         "pre_pr_baseline": PRE_PR_BASELINE,
@@ -224,9 +244,12 @@ def main():
     ap.add_argument("out", nargs="?", default="BENCH_fleet_sim.json")
     ap.add_argument("--smoke", action="store_true",
                     help="1e4 cells only (CI fast tier, <30 s)")
+    ap.add_argument("--core", choices=("v1", "v2"), default="v1",
+                    help="simulation core for the per-size cells; the "
+                         "full v1 run also records the v2 1e6/1e7 cells")
     args = ap.parse_args()
 
-    payload = bench(smoke=args.smoke)
+    payload = bench(smoke=args.smoke, core=args.core)
     existing = {}
     if os.path.exists(args.out):
         with open(args.out) as f:
@@ -234,21 +257,27 @@ def main():
                 existing = json.load(f)
             except ValueError:
                 existing = {}
-    existing["throughput"] = payload
+    key = "throughput" if args.core == "v1" else f"throughput_{args.core}"
+    existing[key] = payload
     with open(args.out, "w") as f:
         json.dump(existing, f, indent=1)
 
     print(f"wrote throughput cells to {args.out} ({payload['wall_s']}s)")
     for label, cell in payload["cells"].items():
-        o = cell["optimized"]
-        line = (f"{label}: {o['events_per_s']:>9.0f} events/s "
-                f"{o['plans_per_s']:>8.0f} plans/s "
-                f"hit={o['plan_cache_hit_rate']:.3f} "
-                f"wall={o['wall_s']}s rss_after={o['rss_after_mb']}MB")
         sp = payload["speedup"].get(label, {})
-        if "events_per_s_vs_pre_pr" in sp:
-            line += f"  ({sp['events_per_s_vs_pre_pr']}x vs pre-PR)"
-        print(line)
+        for key in ("optimized", "core_v2"):
+            o = cell.get(key)
+            if o is None:
+                continue
+            line = (f"{label}[{o['core']}]: {o['events_per_s']:>9.0f} "
+                    f"events/s {o['plans_per_s']:>8.0f} plans/s "
+                    f"hit={o['plan_cache_hit_rate']:.3f} "
+                    f"wall={o['wall_s']}s rss_after={o['rss_after_mb']}MB")
+            if key == "optimized" and "events_per_s_vs_pre_pr" in sp:
+                line += f"  ({sp['events_per_s_vs_pre_pr']}x vs pre-PR)"
+            if key == "core_v2" and "v2_vs_v1_events_per_s" in sp:
+                line += f"  ({sp['v2_vs_v1_events_per_s']}x vs v1)"
+            print(line)
     mb = payload["plan_microbench"]
     print(f"plan microbench: cached {mb['cached']['us_per_plan']}us vs "
           f"uncached {mb['uncached']['us_per_plan']}us per plan "

@@ -28,6 +28,8 @@ import functools
 import math
 from typing import Optional, Sequence
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class CostParams:
@@ -71,9 +73,17 @@ def solve_n_cloud(r_dev: float, p: CostParams, t_network: float,
     Returns 0.0 when the device alone meets the SLA, and n_total when even
     all-cloud cannot meet it (best effort; caller may flag infeasible).
     ``r_cloud`` overrides the reference rate (class-aware variant).
+
+    The closed form itself lives in ``solve_n_cloud_batch`` (single source
+    of truth); this scalar wrapper exists for hot single-device call sites
+    and for ``solve_n_cloud_cached``.
     """
     cb = p.c_batch if c_batch is None else c_batch
     rc = p.r_cloud if r_cloud is None else r_cloud
+    # Scalar transcription of the batch kernel's branch structure.  Every
+    # arithmetic expression below appears verbatim in solve_n_cloud_batch,
+    # and a hypothesis property test pins exact (bitwise) equality of the
+    # two paths over randomized grids, so the closed form cannot drift.
     denom = cb / rc - 1.0 / r_dev
     rhs = p.t_lim - t_network - (p.n_total + p.k_decode) / r_dev
     if rhs >= 0:
@@ -84,6 +94,66 @@ def solve_n_cloud(r_dev: float, p: CostParams, t_network: float,
         return float(p.n_total)
     n = rhs / denom                      # both negative -> positive
     return min(float(p.n_total), max(0.0, n))
+
+
+def solve_n_cloud_batch(r_dev, t_network, p: CostParams,
+                        c_batch=None, r_cloud=None,
+                        t_lim=None, k_decode=None, n_total=None):
+    """Vectorized ``solve_n_cloud``: one numpy pass over whole cohorts.
+
+    ``r_dev`` and ``t_network`` are arrays (or broadcastable scalars);
+    ``c_batch``/``r_cloud``/``t_lim``/``k_decode``/``n_total`` optionally
+    override the corresponding ``CostParams`` field, scalar or per-lane.
+    Returns a float64 array of the same broadcast shape.
+
+    This is the one source of truth for the closed form: the scalar
+    ``solve_n_cloud`` transcribes the same expressions (identical
+    operation order, so IEEE-754 makes the two paths bit-identical — a
+    property test enforces it).  Degenerate edges match the scalar
+    branches exactly: ``rhs >= 0`` lanes (device-only feasible) return
+    0.0, ``denom >= 0`` lanes (the ``r_dev -> r_cloud/c_batch``
+    crossover, where offloading cannot help) return n_total, and the 0/0
+    lanes produced by evaluating the ratio everywhere are discarded by
+    the selects.
+    """
+    cb = np.asarray(p.c_batch if c_batch is None else c_batch, np.float64)
+    rc = np.asarray(p.r_cloud if r_cloud is None else r_cloud, np.float64)
+    tl = np.asarray(p.t_lim if t_lim is None else t_lim, np.float64)
+    kd = np.asarray(p.k_decode if k_decode is None else k_decode, np.float64)
+    nt = np.asarray(p.n_total if n_total is None else n_total, np.float64)
+    rd = np.asarray(r_dev, np.float64)
+    tn = np.asarray(t_network, np.float64)
+    denom = cb / rc - 1.0 / rd
+    rhs = tl - tn - (nt + kd) / rd
+    with np.errstate(divide="ignore", invalid="ignore"):
+        n = rhs / denom                  # junk in lanes the selects discard
+    n = np.minimum(nt, np.maximum(0.0, n))
+    return np.where(rhs >= 0.0, 0.0, np.where(denom >= 0.0, nt, n))
+
+
+def e2e_latency_batch(n_cloud, r_dev, p: CostParams, t_network,
+                      c_batch=None, r_cloud=None):
+    """Vectorized ``e2e_latency`` (same operation order, bit-identical
+    per lane)."""
+    cb = p.c_batch if c_batch is None else c_batch
+    rc = p.r_cloud if r_cloud is None else r_cloud
+    n_cloud = np.asarray(n_cloud, np.float64)
+    r_dev = np.asarray(r_dev, np.float64)
+    return (n_cloud * cb / rc
+            + (p.n_total - n_cloud) / r_dev
+            + t_network
+            + p.k_decode / r_dev)
+
+
+def quantize_step_batch(n_cloud, n_step: int, n_total: int):
+    """Vectorized ``quantize_step``: int64 array of step-grid round-ups.
+
+    Exact for any realistic grid (ceil and the products stay below 2^53,
+    where float64 represents integers exactly).
+    """
+    n_cloud = np.asarray(n_cloud, np.float64)
+    q = np.minimum(float(n_total), np.ceil(n_cloud / n_step) * n_step)
+    return np.where(n_cloud <= 0.0, 0.0, q).astype(np.int64)
 
 
 #: Memoized ``solve_n_cloud`` for hot loops: the same closed-form root,

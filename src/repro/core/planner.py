@@ -36,12 +36,17 @@ from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 from repro.core.admission import BatchingAdmission
 from repro.core.capacity import CloudCapacity, GpuClass
+import numpy as np
+
 from repro.core.cost_model import (
     BatchModel,
     CostParams,
     c_batch_at,
     cloud_gpu_time,
     e2e_latency,
+    e2e_latency_batch,
+    quantize_step_batch,
+    solve_n_cloud_batch,
 )
 from repro.core.scheduler import (
     AllCloudScheduler,
@@ -841,6 +846,125 @@ class Planner:
                      if self.shed_policy is not None else 0.0)
         return _PlanEntry(self.config_epoch, a, gpu_time, has_admission,
                           solo, batched, local_lat, deny_slack)
+
+    # -- cohort path: one vectorized solve for many profiles ----------------
+    def plan_cohort(self, profiles, queue_delay_hint: float = 0.0,
+                    utilization_hint: float = 0.0) -> List[PlanDecision]:
+        """Plan a whole cohort of device profiles at once (the v2
+        simulation core's entry point).
+
+        The profile-dependent stages are solved in ONE numpy pass
+        (``cost_model.solve_n_cloud_batch``) and the resulting
+        ``_PlanEntry``s — bit-identical to ``_solve_profile``'s, see the
+        batch/scalar equality property test — are installed in the
+        ``PlanCache``.  Decisions are then assembled per profile through
+        the exact same ``plan_profile`` / ``BatchingAdmission.decide_from``
+        verdict path the scalar planner uses, so traces recorded from a
+        cohort-planned run still pass ``replay.verify_decisions``.
+
+        Only valid in hot-loop mode (``audit=False``), like
+        ``plan_profile``.  Counter note: cohort pre-solves are counted as
+        cache misses and the per-profile assemblies as hits.
+        """
+        if self.audit:
+            raise ValueError("plan_cohort requires hot-loop mode "
+                             "(Planner(audit=False))")
+        profiles = list(profiles)
+        if not profiles:
+            return []
+        cache = self.cache
+        if cache is None:
+            entries = self._solve_cohort(profiles)
+            self.plan_calls += len(profiles)
+            return [self._finish(pr, queue_delay_hint, utilization_hint, e)
+                    for pr, e in zip(profiles, entries)]
+        epoch = self.config_epoch
+        exact = cache.quanta is None
+        todo: List[DeviceProfile] = []
+        keys: List[tuple] = []
+        seen = set()
+        entries_map = cache._entries
+        for pr in profiles:
+            key = ((pr.r_dev, pr.rtt, pr.bandwidth, pr.k_decode,
+                    pr.has_accelerator) if exact else cache.key_for(pr))
+            if key in seen:
+                continue
+            e = entries_map.get(key)
+            if e is not None and e.epoch == epoch:
+                continue
+            seen.add(key)
+            todo.append(pr)
+            keys.append(key)
+        if todo:
+            cache.misses += len(todo)
+            for key, e in zip(keys, self._solve_cohort(todo)):
+                cache.store(key, e)
+        return [self.plan_profile(pr, queue_delay_hint, utilization_hint)
+                for pr in profiles]
+
+    def _solve_cohort(self, profiles: List[DeviceProfile]) -> List[_PlanEntry]:
+        """Vectorized ``_solve_profile``: same values, one numpy pass.
+
+        Only the concrete Table-4 scheduler types have a closed vector
+        form; unknown scheduler subclasses fall back to the scalar solve
+        (still one entry per profile, just not batched).
+        """
+        sched = self.scheduler
+        cls = type(sched)
+        p = self.p
+        k = len(profiles)
+        r_dev = np.fromiter((pr.r_dev for pr in profiles), np.float64, k)
+        rtt = np.fromiter((pr.rtt for pr in profiles), np.float64, k)
+        if cls is VariableIterationScheduler or \
+                cls is IntelligentBatchingScheduler:
+            n_exact = solve_n_cloud_batch(r_dev, rtt, p,
+                                          c_batch=sched.solve_c_batch)
+            n_final = quantize_step_batch(n_exact, p.n_step, p.n_total)
+        elif cls is ConstantIterationScheduler:
+            n_exact = np.full(k, float(sched.n_const))
+            n_final = np.full(k, sched.n_const, np.int64)
+        elif cls is AllCloudScheduler:
+            n_exact = np.full(k, float(p.n_total))
+            n_final = np.full(k, p.n_total, np.int64)
+        else:
+            return [self._solve_profile(pr) for pr in profiles]
+        nf = n_final.astype(np.float64)
+        # identical expression (and operation order) to _mk_assignment /
+        # BatchingAdmission.latencies at c_batch=1.0, so `lat` doubles as
+        # the admission's solo latency bit-for-bit
+        lat = e2e_latency_batch(nf, r_dev, p, rtt, c_batch=1.0)
+        feas = lat <= p.t_lim + 1e-9
+        gpu = nf * 1.0 / p.r_cloud        # cloud_gpu_time, vectorized
+        adm = self.admission
+        if adm is not None:
+            batched_lat = e2e_latency_batch(nf, r_dev, p, rtt,
+                                            c_batch=adm.c_batch)
+            saves_time = adm.saves_time
+        shed = self.shed_policy is not None
+        if shed:
+            local = e2e_latency_batch(0.0, r_dev, p, rtt, c_batch=1.0)
+        epoch = self.config_epoch
+        t_lim = p.t_lim
+        entries = []
+        for i, pr in enumerate(profiles):
+            nfi = int(n_final[i])
+            lat_i = float(lat[i])
+            a = Assignment(
+                device_id=pr.device_id, r_dev=pr.r_dev, t_network=pr.rtt,
+                n_exact=float(n_exact[i]), n_final=nfi, latency=lat_i,
+                feasible=bool(feas[i]))
+            if adm is not None and nfi > 0:
+                b_i = float(batched_lat[i])
+                entries.append(_PlanEntry(
+                    epoch, a, float(gpu[i]), True, lat_i, b_i,
+                    float(local[i]) if shed else 0.0,
+                    (t_lim - b_i) if saves_time else -math.inf))
+            else:
+                entries.append(_PlanEntry(
+                    epoch, a, float(gpu[i]) if nfi > 0 else 0.0, False,
+                    lat_i, lat_i,
+                    float(local[i]) if shed else 0.0, -math.inf))
+        return entries
 
     def _finish(self, prof: DeviceProfile, queue_delay_hint: float,
                 utilization_hint: float,

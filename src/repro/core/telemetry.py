@@ -98,31 +98,48 @@ class P2Quantile:
         elif x >= h[4]:
             h[4] = x
         # adjust the three middle markers toward their desired positions
-        for i in (1, 2, 3):
-            pi = pos[i]
-            d = want[i - 1] - pi
-            if d >= 1.0:
-                if pos[i + 1] - pi <= 1.0:
-                    continue
-                d = 1.0
-            elif d <= -1.0:
-                if pos[i - 1] - pi >= -1.0:
-                    continue
-                d = -1.0
-            else:
-                continue
-            hi, lo = h[i + 1], h[i - 1]
-            pn, pp = pos[i + 1], pos[i - 1]
-            # piecewise-parabolic prediction
-            new = h[i] + d / (pn - pp) * (
-                (pi - pp + d) * (hi - h[i]) / (pn - pi)
-                + (pn - pi - d) * (h[i] - lo) / (pi - pp))
-            if lo < new < hi:
-                h[i] = new
-            else:                     # fall back to linear interpolation
-                j = i + int(d)
-                h[i] = h[i] + d * (h[j] - h[i]) / (pos[j] - pi)
-            pos[i] = pi + d
+        # (manually unrolled over i=1,2,3: this runs once per
+        # observation at 10^7-arrival scale, and the loop frame +
+        # computed indices were a measurable slice of the simulator's
+        # stats cost; the arithmetic is UNCHANGED — same expressions,
+        # same order — so estimates are bit-identical to the loop form)
+        pi = pos[1]
+        d = want[0] - pi
+        if (d >= 1.0 and pos[2] - pi > 1.0) \
+                or (d <= -1.0 and pos[0] - pi < -1.0):
+            d = 1.0 if d >= 1.0 else -1.0
+            self._nudge(1, pi, d)
+        pi = pos[2]
+        d = want[1] - pi
+        if (d >= 1.0 and pos[3] - pi > 1.0) \
+                or (d <= -1.0 and pos[1] - pi < -1.0):
+            d = 1.0 if d >= 1.0 else -1.0
+            self._nudge(2, pi, d)
+        pi = pos[3]
+        d = want[2] - pi
+        if (d >= 1.0 and pos[4] - pi > 1.0) \
+                or (d <= -1.0 and pos[2] - pi < -1.0):
+            d = 1.0 if d >= 1.0 else -1.0
+            self._nudge(3, pi, d)
+
+    def _nudge(self, i: int, pi: float, d: float) -> None:
+        """Move marker ``i`` one step toward its desired position: the
+        piecewise-parabolic update, with the linear fallback when the
+        parabola leaves the neighbour bracket (cold path — markers move
+        at most once per observation and usually not at all)."""
+        h = self._heights
+        pos = self._pos
+        hi, lo = h[i + 1], h[i - 1]
+        pn, pp = pos[i + 1], pos[i - 1]
+        new = h[i] + d / (pn - pp) * (
+            (pi - pp + d) * (hi - h[i]) / (pn - pi)
+            + (pn - pi - d) * (h[i] - lo) / (pi - pp))
+        if lo < new < hi:
+            h[i] = new
+        else:                         # fall back to linear interpolation
+            j = i + int(d)
+            h[i] = h[i] + d * (h[j] - h[i]) / (pos[j] - pi)
+        pos[i] = pi + d
 
     def value(self) -> float:
         """Current estimate (NaN before any observation; exact while
@@ -138,6 +155,107 @@ class P2Quantile:
             hi = min(lo + 1, len(xs) - 1)
             return xs[lo] + (rank - lo) * (xs[hi] - xs[lo])
         return h[2]
+
+    def _knots(self) -> List[Tuple[float, float]]:
+        """(cumulative probability, height) knots of this estimator's
+        piecewise-linear CDF approximation — marker i sits at empirical
+        rank ``(pos[i]-1)/(n-1)``.  Small streams use the exact sorted
+        samples."""
+        if self.n < 5:
+            xs = sorted(self._heights)
+            if len(xs) == 1:
+                return [(0.0, xs[0]), (1.0, xs[0])]
+            k = len(xs) - 1
+            return [(i / k, x) for i, x in enumerate(xs)]
+        n = self.n
+        return [((self._pos[i] - 1.0) / (n - 1.0), self._heights[i])
+                for i in range(5)]
+
+    def merge(self, other: "P2Quantile") -> "P2Quantile":
+        """Fold ``other``'s state into this estimator, as if (approximately)
+        this one had seen both streams.
+
+        Exact while the combined count is <= 5 (both sides still hold raw
+        samples); beyond that the two piecewise-linear marker CDFs are
+        averaged weighted by observation count and re-inverted at the P²
+        marker quantiles.  Accuracy matches the estimator's own: merged
+        shard estimates agree with a single-stream estimate within P²
+        tolerance (unit-tested).  Used by the v2 simulation core to fold
+        per-cohort shards into the run-level stats.
+        """
+        if other.q != self.q:
+            raise ValueError(
+                f"cannot merge P2Quantile({other.q}) into P2Quantile({self.q})")
+        if other.n == 0:
+            return self
+        if self.n == 0:
+            self.n = other.n
+            self._heights = list(other._heights)
+            self._pos = list(other._pos)
+            self._want = list(other._want)
+            return self
+        n = self.n + other.n
+        if n <= 5:
+            self._heights = sorted(self._heights + other._heights)
+            self.n = n
+            return self
+
+        # Combined CDF F(x) = (n1*F1(x) + n2*F2(x)) / (n1+n2), each Fi
+        # piecewise linear through its marker knots; invert it at the five
+        # marker quantiles to seed the merged marker state.
+        k1, k2 = self._knots(), other._knots()
+        w1 = self.n / n
+        w2 = other.n / n
+
+        def cdf_at(knots, x):
+            if x <= knots[0][1]:
+                return 0.0
+            if x >= knots[-1][1]:
+                return 1.0
+            for (p_lo, h_lo), (p_hi, h_hi) in zip(knots, knots[1:]):
+                if h_lo <= x <= h_hi:
+                    if h_hi <= h_lo:      # zero-width (duplicate heights)
+                        return p_hi
+                    return p_lo + (p_hi - p_lo) * (x - h_lo) / (h_hi - h_lo)
+            return 1.0
+
+        xs = sorted({h for _, h in k1} | {h for _, h in k2})
+        cs = [w1 * cdf_at(k1, x) + w2 * cdf_at(k2, x) for x in xs]
+
+        def invert(d):
+            if d <= cs[0]:
+                return xs[0]
+            for j in range(1, len(xs)):
+                if cs[j] >= d:
+                    dc = cs[j] - cs[j - 1]
+                    if dc <= 0.0:
+                        return xs[j]
+                    return xs[j - 1] + (xs[j] - xs[j - 1]) * (d - cs[j - 1]) / dc
+            return xs[-1]
+
+        q = self.q
+        desired = (0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0)
+        h = [invert(d) for d in desired]
+        for i in range(1, 5):
+            if h[i] < h[i - 1]:
+                h[i] = h[i - 1]
+        pos = [1.0] + [1.0 + (n - 1.0) * d for d in desired[1:4]] + [float(n)]
+        # P² needs strictly increasing marker positions with unit gaps
+        for i in (1, 2, 3):
+            if pos[i] < pos[i - 1] + 1.0:
+                pos[i] = pos[i - 1] + 1.0
+        for i in (3, 2, 1):
+            if pos[i] > pos[i + 1] - 1.0:
+                pos[i] = pos[i + 1] - 1.0
+        self.n = n
+        self._heights = h
+        self._pos = pos
+        # desired positions consistent with the merged count (the same
+        # linear-in-n form ``add`` increments by _dwant each observation)
+        self._want = [1.0 + (n - 1.0) * desired[1],
+                      1.0 + (n - 1.0) * desired[2],
+                      1.0 + (n - 1.0) * desired[3]]
+        return self
 
 
 class StreamingLatencyStats:
@@ -170,6 +288,27 @@ class StreamingLatencyStats:
         for est in self._est_tuple:
             est.add(latency)
 
+    def add_many(self, latencies: Sequence[float],
+                 n_batched: int) -> None:
+        """Bulk ``add``: a batch of latencies of which ``n_batched``
+        came from batched dispatches.  Counters fold at C speed
+        (sum/max builtins) and each P² estimator consumes the batch
+        through one bound method — the v2 fast lane's per-chunk
+        completion drain.  Estimator state after ``add_many`` equals a
+        sequence of scalar ``add`` calls in the same order."""
+        if not latencies:
+            return
+        self.count += len(latencies)
+        self.batched += n_batched
+        self.sum += sum(latencies)
+        m = max(latencies)
+        if m > self.max:
+            self.max = m
+        for est in self._est_tuple:
+            add = est.add
+            for x in latencies:
+                add(x)
+
     def percentile(self, q: float) -> float:
         est = self._estimators.get(float(q))
         if est is None:
@@ -178,6 +317,23 @@ class StreamingLatencyStats:
                 f"{sorted(self._estimators)}, not q={q}; run with "
                 f"exact_stats=True for arbitrary percentiles")
         return est.value()
+
+    def merge(self, other: "StreamingLatencyStats") -> "StreamingLatencyStats":
+        """Fold another shard's counters and quantile estimators into this
+        one (see ``P2Quantile.merge`` for the accuracy contract).  Both
+        sides must track the same quantiles."""
+        if other.quantiles() != self.quantiles():
+            raise ValueError(
+                f"cannot merge stats tracking {other.quantiles()} into "
+                f"stats tracking {self.quantiles()}")
+        self.count += other.count
+        self.batched += other.batched
+        self.sum += other.sum
+        if other.max > self.max:
+            self.max = other.max
+        for q, est in self._estimators.items():
+            est.merge(other._estimators[q])
+        return self
 
     def mean(self) -> float:
         return self.sum / self.count if self.count else math.nan
@@ -299,12 +455,11 @@ def poisson_arrivals(rate: float, duration: float, seed: int = 0,
     return _thinned_arrivals(peak, duration, seed, lambda t: frac)
 
 
-def bursty_arrivals(rate: float, duration: float, seed: int = 0,
-                    burst_factor: float = 4.0, on_fraction: float = 0.2,
-                    cycle_s: float = 60.0) -> Iterator[float]:
-    """On/off (flash-crowd) modulated Poisson with mean ``rate``: for the
-    first ``on_fraction`` of each cycle the rate is ``burst_factor * rate``,
-    the remainder runs at the complementary low rate."""
+def _bursty_rates(rate: float, burst_factor: float,
+                  on_fraction: float) -> Tuple[float, float]:
+    """(high, low) phase rates of the on/off process — shared by the
+    per-event and block generators so their validation and modulation
+    cannot drift apart."""
     if not 0.0 < on_fraction < 1.0:
         raise ValueError("on_fraction must be in (0, 1)")
     if burst_factor * on_fraction > 1.0:
@@ -315,6 +470,16 @@ def bursty_arrivals(rate: float, duration: float, seed: int = 0,
             f"> 1: bursts alone exceed the requested mean rate")
     high = burst_factor * rate
     low = rate * (1.0 - on_fraction * burst_factor) / (1.0 - on_fraction)
+    return high, low
+
+
+def bursty_arrivals(rate: float, duration: float, seed: int = 0,
+                    burst_factor: float = 4.0, on_fraction: float = 0.2,
+                    cycle_s: float = 60.0) -> Iterator[float]:
+    """On/off (flash-crowd) modulated Poisson with mean ``rate``: for the
+    first ``on_fraction`` of each cycle the rate is ``burst_factor * rate``,
+    the remainder runs at the complementary low rate."""
+    high, low = _bursty_rates(rate, burst_factor, on_fraction)
 
     def lam(t):
         return high if (t % cycle_s) < on_fraction * cycle_s else low
@@ -336,6 +501,76 @@ def diurnal_arrivals(rate: float, duration: float, seed: int = 0,
         lam = rate * (1.0 + amplitude * math.sin(2.0 * math.pi * t / period_s))
         return lam / peak if peak > 0 else 0.0
     return _thinned_arrivals(peak, duration, seed, prob)
+
+
+# --------------------------------------------------------------------------
+# Block-vectorized arrival generation (v2 simulation core): same thinning
+# construction, but drawn and filtered in numpy blocks.  NOT
+# stream-identical to the per-event generators for the same seed — a
+# block draws `block` exponentials then `block` uniforms, while the
+# scalar path interleaves them — so the v2 core documents its own rng
+# stream (docs/sim_core_v2.md) and pins its own baseline.
+# --------------------------------------------------------------------------
+def _thinned_arrival_blocks(peak_rate: float, duration: float, seed: int,
+                            accept_prob, block: int = 16384
+                            ) -> Iterator[np.ndarray]:
+    """Yield float64 arrays of accepted arrival times (ascending across
+    and within blocks; possibly empty) until ``duration`` is exceeded.
+    ``accept_prob`` maps a time array to per-point keep probabilities
+    (scalar or array)."""
+    if peak_rate <= 0 or duration <= 0:
+        return
+    rng = np.random.default_rng(seed)
+    scale = 1.0 / peak_rate
+    t0 = 0.0
+    while True:
+        times = t0 + np.cumsum(rng.standard_exponential(block) * scale)
+        keep = rng.random(block) <= accept_prob(times)
+        if times[-1] >= duration:
+            yield times[keep & (times < duration)]
+            return
+        yield times[keep]
+        t0 = float(times[-1])
+
+
+def poisson_arrival_blocks(rate: float, duration: float, seed: int = 0,
+                           max_rate: Optional[float] = None,
+                           block: int = 16384) -> Iterator[np.ndarray]:
+    """Block form of ``poisson_arrivals`` (see rng caveat above)."""
+    peak = max_rate if max_rate is not None else rate
+    if rate > peak + 1e-12:
+        raise ValueError(f"rate {rate} exceeds max_rate {peak}")
+    frac = rate / peak if peak > 0 else 0.0
+    return _thinned_arrival_blocks(peak, duration, seed,
+                                   lambda t: frac, block)
+
+
+def bursty_arrival_blocks(rate: float, duration: float, seed: int = 0,
+                          burst_factor: float = 4.0, on_fraction: float = 0.2,
+                          cycle_s: float = 60.0,
+                          block: int = 16384) -> Iterator[np.ndarray]:
+    """Block form of ``bursty_arrivals`` (see rng caveat above)."""
+    high, low = _bursty_rates(rate, burst_factor, on_fraction)
+    peak = max(high, low)
+
+    def prob(ts):
+        lam = np.where(np.mod(ts, cycle_s) < on_fraction * cycle_s, high, low)
+        return lam / peak
+    return _thinned_arrival_blocks(peak, duration, seed, prob, block)
+
+
+def diurnal_arrival_blocks(rate: float, duration: float, seed: int = 0,
+                           period_s: float = 86400.0, amplitude: float = 0.8,
+                           block: int = 16384) -> Iterator[np.ndarray]:
+    """Block form of ``diurnal_arrivals`` (see rng caveat above)."""
+    if not 0.0 <= amplitude <= 1.0:
+        raise ValueError("amplitude must be in [0, 1]")
+    peak = rate * (1.0 + amplitude)
+
+    def prob(ts):
+        lam = rate * (1.0 + amplitude * np.sin(2.0 * math.pi * ts / period_s))
+        return lam / peak
+    return _thinned_arrival_blocks(peak, duration, seed, prob, block)
 
 
 # --------------------------------------------------------------------------

@@ -104,12 +104,16 @@ from repro.core.sla import AdaptiveSLAController, DeadlineTracker, SLAPolicy
 from repro.core.telemetry import (
     DeviceProfile,
     StreamingLatencyStats,
+    bursty_arrival_blocks,
     bursty_arrivals,
+    diurnal_arrival_blocks,
     diurnal_arrivals,
     fleet_sampler,
     latency_percentile,
+    poisson_arrival_blocks,
     poisson_arrivals,
 )
+from repro.serving.event_wheel import EventWheel
 from repro.serving.simulator import CALIBRATED, table4_fleet
 
 # event kinds, in tie-break priority order at equal timestamps: capacity
@@ -209,6 +213,20 @@ class SimConfig:
     #: to the default None (the golden-trace anchor; pinned in
     #: tests/test_engine_replay.py).
     trace_out: Optional[str] = None
+    #: simulation core (docs/sim_core_v2.md): "v1" (default) is the
+    #: bit-identical golden-trace core; "v2" is the throughput core —
+    #: block-vectorized arrivals, cohort-vectorized planning, bucketed
+    #: time-wheel event queue.  v2 has its OWN rng consumption order and
+    #: pinned baseline; aggregates match v1 within documented tolerance
+    #: (tests/test_sim_core_v2.py), traces verify the same way.
+    core: str = "v1"
+    #: v2 only: event-wheel bucket width in seconds; None auto-sizes
+    #: from the arrival rate (~a few events per bucket).
+    v2_bucket_s: Optional[float] = None
+    #: v2 only (exact_stats=False): number of StreamingLatencyStats
+    #: shards filled round-robin and merged (P² merge) into the
+    #: run-level stream at the end of the run.
+    v2_stream_shards: int = 4
 
     def build_capacity(self) -> CloudCapacity:
         if self.capacity is not None:
@@ -868,6 +886,7 @@ class FleetSimulator:
             cache=cfg.plan_cache)
         self.scheduler = self.planner.scheduler
         self.admission = self.planner.admission
+        self.fleet = fleet
         self.devices = fleet_sampler(fleet, seed=cfg.seed + 1,
                                      mode=cfg.sampling)
         self.arrivals = _make_arrivals(cfg)
@@ -951,12 +970,10 @@ class FleetSimulator:
         observe; this is what lets the heap drain and the run terminate."""
         return self._next_arrival is not None or self.tracker.in_flight() > 0
 
-    # -- main loop ---------------------------------------------------------
-    def run(self) -> FleetSimResult:
-        cfg = self.cfg
-        self._next_arrival = next(self.arrivals, None)
-        if self._next_arrival is not None:
-            self._push(self._next_arrival, EVT_ARRIVAL)
+    def _arm_recurring(self, cfg: SimConfig) -> None:
+        """Initial pushes of the recurring/scripted event streams (shared
+        by both cores; called right after the first arrival is armed so
+        the v1 tie-break ordinals are unchanged)."""
         if cfg.autoscale:
             self._push(cfg.autoscale_interval_s, EVT_AUTOSCALE)
         self._push(cfg.metrics_interval_s, EVT_METRICS)
@@ -976,6 +993,14 @@ class FleetSimulator:
         if cfg.preempt_rate > 0:
             self._arm_preempt(0.0)
 
+    # -- main loop ---------------------------------------------------------
+    def run(self) -> FleetSimResult:
+        cfg = self.cfg
+        self._next_arrival = next(self.arrivals, None)
+        if self._next_arrival is not None:
+            self._push(self._next_arrival, EVT_ARRIVAL)
+        self._arm_recurring(cfg)
+
         # hot loop: table dispatch (handlers indexed by event kind) with
         # the heap and pop bound to locals — this loop runs millions of
         # times per fleet-scale simulation
@@ -994,7 +1019,10 @@ class FleetSimulator:
         self.n_events = next(self._seq)
         if self._trace is not None:
             self._trace.close()
+        return self._build_result(last_t)
 
+    def _build_result(self, last_t: float) -> FleetSimResult:
+        cfg = self.cfg
         # integrate through the final event so the trailing idle window
         # (device tails after the last cloud job) counts toward the mean
         util = self.pool.utilization(upto=last_t)
@@ -1524,6 +1552,628 @@ class FleetSimulator:
             self._push(t + self.cfg.metrics_interval_s, EVT_METRICS)
 
 
+def _make_arrival_blocks(cfg: SimConfig):
+    """v2 arrival stream: the same thinned processes as
+    ``_make_arrivals``, drawn in numpy blocks (telemetry.*_arrival_blocks
+    — NOT stream-identical to the scalar generators for the same seed;
+    see docs/sim_core_v2.md)."""
+    if cfg.process == "poisson":
+        return poisson_arrival_blocks(cfg.rate, cfg.duration, seed=cfg.seed,
+                                      max_rate=cfg.max_rate)
+    if cfg.process == "bursty":
+        return bursty_arrival_blocks(cfg.rate, cfg.duration, seed=cfg.seed)
+    if cfg.process == "diurnal":
+        return diurnal_arrival_blocks(cfg.rate, cfg.duration, seed=cfg.seed,
+                                      period_s=cfg.diurnal_period_s)
+    raise ValueError(f"unknown arrival process {cfg.process!r}")
+
+
+class FleetSimulatorV2(FleetSimulator):
+    """The throughput core (``SimConfig.core="v2"`` — docs/sim_core_v2.md).
+
+    Same handlers, planner, pool, windows, autoscaler, preemption and
+    telemetry as v1; what changes is the machinery around them:
+
+    * arrivals come from block-vectorized generators and are bulk-pushed
+      into the event queue (v2-specific rng consumption order);
+    * the event queue is a bucketed ``EventWheel`` — exact order across
+      buckets, FIFO within one — instead of a totally ordered heap;
+    * the plan cache is pre-warmed with ONE vectorized
+      ``Planner.plan_cohort`` pass over the whole fleet (entries
+      bit-identical to the scalar solve, so decision traces still pass
+      ``replay.verify_decisions``);
+    * streaming stats fill round-robin shards merged via
+      ``StreamingLatencyStats.merge`` at the end of the run.
+
+    v2 pins its own golden baseline; v1 stays the oracle via the
+    aggregate-tolerance property tests in tests/test_sim_core_v2.py.
+    """
+
+    def __init__(self, cfg: SimConfig):
+        super().__init__(cfg)
+        width = cfg.v2_bucket_s
+        if width is None:
+            # aim for a handful of events per bucket (~3.5 events per
+            # arrival), capped so low-rate runs keep sub-second order
+            width = min(0.25, 4.0 / cfg.rate) if cfg.rate > 0 else 0.25
+        self._wheel = EventWheel(width)
+        self._arrival_blocks = _make_arrival_blocks(cfg)
+        self._pending_arrivals = 0
+        self._arrivals_left = True
+        # one vectorized solve for the whole fleet: every per-arrival
+        # plan_profile below is then a pure cache hit
+        if self.planner.cache is not None:
+            self.planner.plan_cohort(self.fleet)
+        self._shards: Optional[List[StreamingLatencyStats]] = None
+        self._shard_i = 0
+        if self.stream is not None:
+            self._shards = [StreamingLatencyStats()
+                            for _ in range(max(1, cfg.v2_stream_shards))]
+
+    # -- event plumbing (wheel instead of heap) ----------------------------
+    def _push(self, t: float, kind: int, payload=None) -> None:
+        self._wheel.push(t, kind, payload)
+
+    def _active(self) -> bool:
+        return (self._pending_arrivals > 0 or self._arrivals_left
+                or self.tracker.in_flight() > 0)
+
+    def _refill_arrivals(self) -> None:
+        """Bulk-push the next non-empty arrival block (tolist(): native
+        floats keep every downstream timestamp off numpy scalars)."""
+        for blk in self._arrival_blocks:
+            if len(blk):
+                self._pending_arrivals = len(blk)
+                self._wheel.push_times(blk.tolist(), EVT_ARRIVAL)
+                return
+        self._arrivals_left = False
+
+    def _schedule_next_arrival(self) -> None:
+        n = self._pending_arrivals - 1
+        self._pending_arrivals = n
+        if n == 0 and self._arrivals_left:
+            self._refill_arrivals()
+
+    def _on_job_done(self, t: float, job: _Job) -> None:
+        # v1's handler with its inlined heap pushes routed to the wheel
+        if job.killed:
+            return
+        qw = job.started - job.submitted
+        n_total = self.p.n_total
+        k_decode = self.p.k_decode
+        push = self._wheel.push
+        for m in job.members:
+            m.queue_wait += qw
+            prof = m.profile
+            r_dev = prof.r_dev
+            done = (t + prof.rtt
+                    + (n_total - m.assignment.n_final - m.n_credit)
+                    / r_dev
+                    + k_decode / r_dev)
+            push(done, EVT_COMPLETE, m)
+        for nxt, finish in self.pool.job_done(t, job):
+            push(finish, EVT_JOB_DONE, nxt)
+
+    def _on_complete(self, t: float, req: SimRequest) -> None:
+        shards = self._shards
+        if shards is None:                 # exact_stats: v1 record path
+            super()._on_complete(t, req)
+            return
+        self.tracker.close(req.request_id, t)
+        latency = t - req.arrival
+        i = self._shard_i
+        shards[i].add(latency, req.batched)
+        self._shard_i = (i + 1) % len(shards)
+        self._recent_lat.append(latency)
+
+    # -- vectorized fast lane (docs/sim_core_v2.md) ------------------------
+    def _fast_eligible(self) -> bool:
+        """The cohort fast lane covers the modal throughput config: FIFO
+        dispatch on a single GPU class, streaming stats, no decision
+        trace, no preemption, no shedding, no adaptive SLA.  Everything
+        else falls back to the generic wheel loop (same v2 semantics,
+        event-at-a-time)."""
+        cfg = self.cfg
+        return (self._trace is None
+                and self.stream is not None
+                and not self._preempting
+                and cfg.dispatch == "fifo"
+                and self.pool._single_pool is not None
+                and self.planner.shed_policy is None
+                and self.sla_ctl is None
+                and cfg.sampling in ("cycle", "uniform"))
+
+    def _run_fast(self) -> FleetSimResult:
+        """Cohort-vectorized main loop.
+
+        Arrivals are consumed in fixed time chunks instead of one event
+        at a time.  Per-profile plan values come from ONE vectorized
+        ``Planner._solve_cohort`` pass (the same arrays behind
+        ``plan_cohort``); the per-arrival work is then the admission
+        verdict (``deny_slack > queue_delay_hint`` — exactly
+        ``BatchingAdmission.decide_from``'s branch), window bookkeeping
+        and the FIFO pool, which is modeled by the same algorithm as
+        ``GpuPool`` (explicit queue; jobs start when a server frees or
+        capacity arrives), so start times match v1's event loop given
+        the same submit sequence and capacity timeline.
+
+        Chunk-granular approximations (all bounded by the chunk width,
+        documented in docs/sim_core_v2.md): window timeout flushes,
+        autoscale/metrics tick times, demand-window expiry, and the
+        freshness of the queue-delay hint between pool settles.
+        """
+        cfg = self.cfg
+        p = self.p
+        fleet = self.fleet
+        F = len(fleet)
+        planner = self.planner
+        entries = planner._solve_cohort(fleet)
+
+        t_lim = p.t_lim
+        n_total = p.n_total
+        k_decode = p.k_decode
+        batch_size = cfg.batch_size
+        window_s = cfg.window_s
+        c_batch_of = planner.c_batch_of
+        cb_full = (c_batch_of(batch_size)
+                   if self.admission is not None else 1.0)
+
+        # per-fleet-index plan arrays (plain lists: the hot loop below
+        # does scalar lookups, not numpy gathers)
+        nf_l = [e.asg.n_final for e in entries]
+        deny_l = [e.deny_slack for e in entries]    # -inf: never batch
+        tail_l = [pr.rtt + (n_total - nf_l[i]) / pr.r_dev
+                  + k_decode / pr.r_dev
+                  for i, pr in enumerate(fleet)]    # post-cloud tail
+        local_l = [e2e_latency(0, pr.r_dev, p, pr.rtt, c_batch=1.0)
+                   for pr in fleet]                 # device-only e2e
+
+        # chunk width: ~256 arrivals per chunk, capped so window
+        # timeouts and the recurring timers keep sub-chunk fidelity
+        q = 256.0 / cfg.rate if cfg.rate > 0 else 1.0
+        if self.admission is not None:
+            q = min(q, window_s / 4.0)
+        if cfg.autoscale:
+            q = min(q, cfg.autoscale_interval_s)
+        q = max(min(q, cfg.metrics_interval_s, 0.05 * t_lim), 1e-3)
+        inv_q = 1.0 / q
+
+        # -- single-class FIFO pool state (GpuPool's algorithm on plain
+        # floats: `ends` is a heap of busy servers' job-end times, the
+        # queue holds (service, members) in submission order) --
+        pl = self.pool._single_pool
+        cls = pl.gpu_class
+        cls_name = cls.name if cls is not None else "gpu"
+        cls_rate = cls.r_cloud if cls is not None else p.r_cloud
+        weight = pl.cost_weight
+        cap = pl.capacity
+        min_gpus = pl.min_gpus
+        pending = 0
+        peak = cap
+        released_total = 0
+        ends: List[float] = []
+        queue: deque = deque()
+        queued_service = 0.0
+        committed = 0.0                 # gpu-seconds, charged at start
+        cap_int = 0.0
+        last_cap_t = 0.0
+        adds: deque = deque()           # scheduled (t_add, k) capacity
+
+        # in-flight member completions, bucketed by completion chunk:
+        # chunk_idx -> [(done, latency, batched, deadline), ...].  A
+        # chunk's bucket drains wholesale at the first boundary past it
+        # (stats are order-insensitive aggregates, so no heap is
+        # needed; counts are exact at chunk boundaries)
+        comp_buckets: Dict[int, List[Tuple[float, float, bool, float]]] = {}
+        comp_n = 0
+        drain_ci = 0
+        windows: Dict[int, list] = {}   # n_final -> [flush_at, members]
+        demand: deque = deque()         # (t_last, {n_final: count})
+        wg_counts: Dict[int, int] = {}
+
+        shards = self._shards
+        n_shards = len(shards)
+        shard_i = 0
+        n_arr = 0
+        n_jobs = 0
+        n_ev = 0
+        completed_n = 0
+        violations_n = 0
+        last_t = 0.0
+        heappush = heapq.heappush
+        heappop = heapq.heappop
+
+        def start_job(start: float, service: float, members) -> None:
+            nonlocal committed, comp_n
+            committed += service
+            end = start + service
+            heappush(ends, end)
+            b01 = len(members) >= 2
+            comp_n += len(members)
+            for ta, ix in members:
+                done = end + tail_l[ix]
+                ci = int(done * inv_q)
+                b = comp_buckets.get(ci)
+                if b is None:
+                    comp_buckets[ci] = [(done, done - ta, b01, ta + t_lim)]
+                else:
+                    b.append((done, done - ta, b01, ta + t_lim))
+
+        def settle(now: float) -> None:
+            # servers whose job ended by `now` free up; FIFO queue
+            # drains onto them at the end times (== v1's JOB_DONE drain)
+            nonlocal queued_service
+            while ends and ends[0] <= now:
+                e = heappop(ends)
+                if queue:
+                    service, members = queue.popleft()
+                    queued_service -= service
+                    start_job(e, service, members)
+
+        def dispatch(now: float, members) -> None:
+            nonlocal queued_service, n_jobs
+            n_jobs += 1
+            b = len(members)
+            n = nf_l[members[0][1]]
+            cb = (cb_full if b == batch_size
+                  else 1.0 if b == 1 else c_batch_of(b))
+            service = n * cb / cls_rate
+            settle(now)
+            if len(ends) < cap:
+                start_job(now, service, members)
+            else:
+                queue.append((service, members))
+                queued_service += service
+
+        def apply_adds(upto: float) -> None:
+            nonlocal cap, pending, cap_int, last_cap_t, peak, n_ev
+            nonlocal queued_service, last_t
+            while adds and adds[0][0] <= upto:
+                ta, k = adds.popleft()
+                settle(ta)
+                cap_int += cap * (ta - last_cap_t)
+                last_cap_t = ta
+                cap += k
+                pending -= k
+                if cap > peak:
+                    peak = cap
+                if ta > last_t:
+                    last_t = ta
+                n_ev += 1
+                while queue and len(ends) < cap:
+                    service, members = queue.popleft()
+                    queued_service -= service
+                    start_job(ta, service, members)
+
+        def drain_completions(upto: float) -> None:
+            # bucket-granular: drains every bucket wholly below `upto`
+            # (one shard add_many per bucket instead of per-member heap
+            # pops — counts/violations are exact, stats ingest order is
+            # per-bucket FIFO rather than completion-sorted)
+            nonlocal completed_n, violations_n, shard_i, last_t
+            nonlocal comp_n, drain_ci
+            if upto == math.inf:
+                hi = max(comp_buckets) + 1 if comp_buckets else drain_ci
+            else:
+                hi = int(upto * inv_q)
+            recent = self._recent_lat
+            while drain_ci < hi:
+                b = comp_buckets.pop(drain_ci, None)
+                drain_ci += 1
+                if b is None:
+                    continue
+                lats = []
+                nb = 0
+                viol = 0
+                mx = 0.0
+                for done, lat, b01, dl in b:
+                    lats.append(lat)
+                    if b01:
+                        nb += 1
+                    if done > dl + 1e-9:    # DeadlineTracker.close
+                        viol += 1
+                    if done > mx:
+                        mx = done
+                completed_n += len(b)
+                comp_n -= len(b)
+                violations_n += viol
+                shards[shard_i].add_many(lats, nb)
+                shard_i = (shard_i + 1) % n_shards
+                recent.extend(lats)
+                if mx > last_t:
+                    last_t = mx
+
+        def do_autoscale(now: float) -> None:
+            nonlocal cap, pending, cap_int, last_cap_t, released_total
+            nonlocal n_ev
+            n_ev += 1
+            settle(now)
+            expire = now - cfg.horizon_s
+            while demand and demand[0][0] < expire:
+                _, counts = demand.popleft()
+                for n, c in counts.items():
+                    wg_counts[n] -= c
+            wg = {n: float(n * c) for n, c in wg_counts.items() if c > 0}
+            summary = ScheduleSummary(
+                name=cfg.policy, assignments=[], total_gpu_time=0.0,
+                latencies=[], violations=0, group_workloads=wg)
+            plan = allocate_gpus_heterogeneous(
+                summary, planner.p, self.capacity_spec,
+                current={cls_name: cap},
+                horizon_s=min(cfg.horizon_s, now),
+                headroom=cfg.headroom,
+                release_threshold=cfg.release_threshold,
+                # single class (guarded by _fast_eligible): the
+                # deadline floors never consume the demand profiles
+                demands=iter(()),
+                demand_c_batch=cb_full,
+                rate_discounts=None)
+            target = plan.targets.get(cls_name, cap)
+            provisioned = cap + pending
+            if target > provisioned:
+                k = target - provisioned
+                pending += k
+                adds.append((now + cfg.provision_delay_s, k))
+            elif plan.release_gpus and target < cap:
+                tgt = max(target, len(ends), min_gpus)  # release_to
+                rel = cap - tgt
+                if rel > 0:
+                    cap_int += cap * (now - last_cap_t)
+                    last_cap_t = now
+                    cap = tgt
+                    released_total += rel
+
+        def do_metrics(now: float) -> None:
+            nonlocal n_ev
+            n_ev += 1
+            settle(now)
+            busy_int = committed - sum(e - now for e in ends)
+            cap_int_now = cap_int + cap * (now - last_cap_t)
+            d_busy = busy_int - self._last_busy_int
+            d_cap = cap_int_now - self._last_cap_int
+            self._last_busy_int = busy_int
+            self._last_cap_int = cap_int_now
+            lats = self._recent_lat
+            self._recent_lat = []
+            win_depth = sum(len(w[1]) for w in windows.values())
+            in_flight = (comp_n + win_depth
+                         + sum(len(m) for _, m in queue))
+            ms = math.inf
+            for b in comp_buckets.values():
+                for _, _, _, dl in b:
+                    if dl < ms:
+                        ms = dl
+            for _, members in queue:
+                for ta, _ in members:
+                    if ta + t_lim < ms:
+                        ms = ta + t_lim
+            for w in windows.values():
+                for ta, _ in w[1]:
+                    if ta + t_lim < ms:
+                        ms = ta + t_lim
+            self.timeseries.append({
+                "t": now,
+                "arrivals": n_arr,
+                "completed": completed_n,
+                "in_flight": in_flight,
+                "violations": violations_n,
+                "p50_latency": (latency_percentile(lats, 50.0)
+                                if lats else None),
+                "p99_latency": (latency_percentile(lats, 99.0)
+                                if lats else None),
+                "queue_depth": len(queue),
+                "window_depth": win_depth,
+                "gpus": cap,
+                "gpus_pending": pending,
+                "gpus_busy": len(ends),
+                "utilization": (d_busy / d_cap) if d_cap > 0 else 0.0,
+                "gpu_seconds": committed,
+                "gpu_cost": committed * weight,
+                "t_lim": t_lim,
+                "preempted_gpus": 0,
+                "killed_jobs": 0,
+                "rejected": 0,
+                "degraded": 0,
+                "replans": 0,
+                "per_class": {cls_name: {"gpus": cap, "busy": len(ends),
+                                         "queue": len(queue)}},
+                "min_slack": (ms - now) if ms < math.inf else None,
+            })
+
+        # -- chunked main loop --------------------------------------------
+        next_autoscale = (cfg.autoscale_interval_s if cfg.autoscale
+                          else math.inf)
+        next_metrics = cfg.metrics_interval_s
+        blocks = self._arrival_blocks
+        buf: Optional[List[float]] = None
+        idx_buf: Optional[List[int]] = None
+        bi = 0
+        uniform = cfg.sampling == "uniform"
+        # v2-specific sampling stream for mode "uniform": same seed
+        # family as v1's sampler, drawn in blocks (rng-stream caveat)
+        samp_rng = (np.random.default_rng(cfg.seed + 1) if uniform
+                    else None)
+        ord_ = 0
+        T1 = q
+        while True:
+            if buf is not None and bi >= len(buf):
+                buf = None
+            if buf is None:
+                for blk in blocks:
+                    if len(blk):
+                        buf = blk.tolist()
+                        if uniform:
+                            idx_buf = samp_rng.integers(
+                                0, F, size=len(buf)).tolist()
+                        bi = 0
+                        break
+            if (buf is None and not comp_buckets and not windows
+                    and not queue):
+                break
+            apply_adds(T1)
+            settle(T1 - q)
+            drain_completions(T1 - q)
+            while True:
+                if next_autoscale <= next_metrics:
+                    tx = next_autoscale
+                    if tx >= T1:
+                        break
+                    do_autoscale(tx)
+                    next_autoscale += cfg.autoscale_interval_s
+                else:
+                    tx = next_metrics
+                    if tx >= T1:
+                        break
+                    do_metrics(tx)
+                    next_metrics += cfg.metrics_interval_s
+                if tx > last_t:
+                    last_t = tx
+            cc: Dict[int, int] = {}
+            t_a = 0.0
+            while buf is not None:
+                t_a = buf[bi]
+                if t_a >= T1:
+                    break
+                ix = idx_buf[bi] if uniform else ord_
+                bi += 1
+                if not uniform:
+                    ord_ += 1
+                    if ord_ == F:
+                        ord_ = 0
+                n_arr += 1
+                n = nf_l[ix]
+                cc[n] = cc.get(n, 0) + 1
+                if n <= 0:
+                    # device-only: completes at the local closed form
+                    lat = local_l[ix]
+                    done = t_a + lat
+                    ci = int(done * inv_q)
+                    b = comp_buckets.get(ci)
+                    if b is None:
+                        comp_buckets[ci] = [(done, lat, False,
+                                             t_a + t_lim)]
+                    else:
+                        b.append((done, lat, False, t_a + t_lim))
+                    comp_n += 1
+                    if bi >= len(buf):
+                        break
+                    continue
+                settle(t_a)
+                qd = (queued_service / (cap if cap > 0 else 1)
+                      if queue else 0.0)
+                if deny_l[ix] > qd:     # decide_from: max_wait > 0
+                    w = windows.get(n)
+                    mw = deny_l[ix] - qd
+                    stale = t_a + (window_s if window_s < mw else mw)
+                    if w is None:
+                        windows[n] = [stale, [(t_a, ix)]]
+                        n_ev += 1
+                    else:
+                        mem = w[1]
+                        mem.append((t_a, ix))
+                        if len(mem) >= batch_size:
+                            del windows[n]
+                            dispatch(t_a, mem)
+                        elif stale < w[0]:
+                            w[0] = stale
+                else:
+                    dispatch(t_a, ((t_a, ix),))
+                if bi >= len(buf):
+                    break
+            if cc:
+                demand.append((t_a, cc))
+                for n, c in cc.items():
+                    wg_counts[n] = wg_counts.get(n, 0) + c
+            if windows:
+                expired = [n for n, w in windows.items() if w[0] < T1]
+                for n in expired:
+                    w = windows.pop(n)
+                    n_ev += 1
+                    dispatch(w[0], w[1])
+            T1 += q
+        # trailing scheduled capacity (v1 drains every EVT_CAPACITY)
+        apply_adds(math.inf)
+        settle(last_t)
+        drain_completions(math.inf)
+        cap_int += cap * (last_t - last_cap_t)
+
+        # -- write-back: the real pool/tracker objects feed
+        # _build_result and per_class_stats --
+        self.n_arrivals = n_arr
+        self.n_events = n_ev + n_arr + n_jobs + completed_n
+        self.tracker.completed = completed_n
+        self.tracker.violations = violations_n
+        # one decision per arrival, served from the cohort solve (the
+        # cache-hit path's work, vectorized)
+        planner.plan_calls += n_arr
+        if planner.cache is not None:
+            planner.cache.hits += n_arr
+        pl.capacity = cap
+        pl.pending = pending
+        pl.peak_capacity = peak
+        pl.released_total = released_total
+        pl.gpu_seconds = committed
+        pl.weighted_gpu_seconds = committed * weight
+        pl.busy = 0
+        pl.queued_service = 0.0
+        pl._busy_integral = committed
+        pl._cap_integral = cap_int
+        pl._last_t = last_t
+        self.pool.peak_capacity = peak
+        merged = StreamingLatencyStats()
+        for s in shards:
+            merged.merge(s)
+        self.stream = merged
+        return self._build_result(last_t)
+
+    # -- main loop ---------------------------------------------------------
+    def run(self) -> FleetSimResult:
+        cfg = self.cfg
+        if self._fast_eligible():
+            return self._run_fast()
+        self._refill_arrivals()
+        self._arm_recurring(cfg)
+
+        handlers = (self._on_capacity, self._on_job_done,
+                    self._on_arrival, self._on_window, self._on_autoscale,
+                    self._on_complete, self._on_metrics, self._on_preempt)
+        wheel = self._wheel
+        buckets = wheel.buckets
+        order = wheel.order
+        pop = heapq.heappop
+        t = 0.0
+        n_ev = 0
+        while order:
+            idx = pop(order)
+            bucket = buckets[idx]
+            i = 0
+            # the bucket may GROW while draining: handlers only schedule
+            # at t' >= t, so same-bucket pushes append to this list and
+            # run this pass (wheel FIFO semantics); future-bucket pushes
+            # create/extend later buckets
+            while i < len(bucket):
+                t, kind, payload = bucket[i]
+                i += 1
+                handlers[kind](t, payload)
+            n_ev += i
+            del buckets[idx]
+        self.n_events = n_ev
+        if self._trace is not None:
+            self._trace.close()
+        if self._shards is not None:
+            merged = StreamingLatencyStats()
+            for s in self._shards:
+                merged.merge(s)
+            self.stream = merged
+        return self._build_result(t)
+
+
 def run_fleet_sim(cfg: SimConfig) -> FleetSimResult:
-    """Convenience wrapper: build + run one simulation."""
+    """Convenience wrapper: build + run one simulation on the core the
+    config selects (``SimConfig.core``)."""
+    if cfg.core == "v2":
+        return FleetSimulatorV2(cfg).run()
+    if cfg.core != "v1":
+        raise ValueError(f"unknown simulation core {cfg.core!r}; "
+                         f"expected 'v1' or 'v2'")
     return FleetSimulator(cfg).run()

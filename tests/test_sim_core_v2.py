@@ -1,0 +1,421 @@
+"""Simulation core v2: cohort-vectorized planning, the bucketed event
+wheel, and the chunked fast lane (docs/sim_core_v2.md).
+
+Covers the PR acceptance criteria:
+
+  * ``cost_model.solve_n_cloud_batch`` equals the scalar closed form
+    **bitwise** over randomized grids, including the degenerate edges
+    (device-only feasible, cloud-not-faster crossover, n_total cap).
+  * ``Planner.plan_cohort`` produces the same decisions as per-profile
+    ``plan_profile`` (the cohort entries feed the same verdict paths).
+  * the ``EventWheel`` orders exactly across buckets and FIFO within
+    one, and tolerates pushes landing in the draining bucket.
+  * v2 pins its own golden baseline (the v1 golden trace stays pinned,
+    untouched, in test_fleet_sim.py); the chunked fast lane is
+    event-dynamics-identical to the generic wheel path on the golden
+    config.
+  * v1 stays the oracle: v2 aggregate distributions (completions,
+    violation rate, GPU-seconds, P² p50/p99) agree within tolerance
+    across seeds and arrival processes (the two cores draw different
+    rng streams, so equality is distributional, never per-event).
+  * a v2 run with ``trace_out`` passes ``replay.verify_decisions``
+    field-exactly on TRACE_FIELDS.
+  * ``StreamingLatencyStats.merge``/``add_many`` (the v2 shard path)
+    agree with a single scalar-add stream.
+"""
+import hashlib
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import (
+    CostParams,
+    solve_n_cloud,
+    solve_n_cloud_batch,
+)
+from repro.core.planner import TRACE_FIELDS, PlanCache, Planner
+from repro.core.telemetry import P2Quantile, StreamingLatencyStats
+from repro.serving.event_wheel import EventWheel
+from repro.serving.fleet_sim import (
+    FleetSimulator,
+    FleetSimulatorV2,
+    SimConfig,
+    run_fleet_sim,
+)
+from repro.serving.replay import read_trace, verify_decisions
+from repro.serving.simulator import CALIBRATED, table4_fleet
+
+GOLDEN = dict(policy="variable+batching", rate=12.0, duration=40.0,
+              seed=7, gpus_init=10, max_gpus=32, metrics_interval_s=10.0)
+
+
+# --------------------------------------------------------------------------
+# closed form: batch == scalar, bitwise
+# --------------------------------------------------------------------------
+def _params(r_cloud=100.0, n_total=1000, n_step=100, t_lim=10.0,
+            k_decode=1.0, c_batch=1.0):
+    return CostParams(r_cloud=r_cloud, n_total=n_total, n_step=n_step,
+                      t_lim=t_lim, k_decode=k_decode, c_batch=c_batch)
+
+
+def _assert_batch_matches_scalar(r_devs, t_nets, p, c_batch=None):
+    got = solve_n_cloud_batch(np.array(r_devs, np.float64),
+                              np.array(t_nets, np.float64), p,
+                              c_batch=c_batch)
+    for i, (rd, tn) in enumerate(zip(r_devs, t_nets)):
+        want = solve_n_cloud(rd, p, tn, c_batch=c_batch)
+        assert float(got[i]) == want, (
+            f"lane {i}: batch {float(got[i])!r} != scalar {want!r} "
+            f"(r_dev={rd}, t_network={tn})")
+
+
+@pytest.mark.parametrize("case", [
+    # interior solutions around the Table-4 regime
+    dict(r_devs=[5.0, 20.0, 80.0, 150.0], t_nets=[0.05, 0.2, 0.5, 1.0]),
+    # rhs >= 0: device alone meets the SLA -> 0.0 lanes
+    dict(r_devs=[500.0, 1000.0], t_nets=[0.0, 0.1],
+         p=_params(t_lim=100.0)),
+    # denom >= 0: device faster than cloud/c_batch -> n_total lanes
+    dict(r_devs=[500.0, 90.0], t_nets=[0.5, 0.5],
+         p=_params(r_cloud=50.0, c_batch=2.0, t_lim=2.0)),
+    # n_total cap: SLA so tight even all-cloud clips
+    dict(r_devs=[1.0, 2.0], t_nets=[5.0, 8.0], p=_params(t_lim=0.5)),
+    # zero-iteration job edge
+    dict(r_devs=[5.0, 50.0], t_nets=[0.1, 0.1], p=_params(n_total=0)),
+    # per-call c_batch override (the admission's batched solve)
+    dict(r_devs=[5.0, 20.0, 80.0], t_nets=[0.1, 0.3, 0.9], c_batch=1.6),
+])
+def test_solve_n_cloud_batch_matches_scalar_fixed(case):
+    p = case.get("p", _params())
+    _assert_batch_matches_scalar(case["r_devs"], case["t_nets"], p,
+                                 c_batch=case.get("c_batch"))
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    r_devs=st.lists(st.floats(0.1, 1000.0), min_size=1, max_size=32),
+    t_net=st.floats(0.0, 20.0),
+    r_cloud=st.floats(1.0, 5000.0),
+    n_total=st.integers(0, 5000),
+    t_lim=st.floats(0.01, 100.0),
+    k_decode=st.floats(0.0, 10.0),
+    c_batch=st.floats(0.5, 4.0),
+)
+def test_solve_n_cloud_batch_matches_scalar_property(
+        r_devs, t_net, r_cloud, n_total, t_lim, k_decode, c_batch):
+    """The batch kernel IS the closed form: every lane bit-identical to
+    the scalar transcription, whatever branch it lands on."""
+    p = _params(r_cloud=r_cloud, n_total=n_total, t_lim=t_lim,
+                k_decode=k_decode, c_batch=c_batch)
+    t_nets = [t_net + 0.01 * i for i in range(len(r_devs))]
+    _assert_batch_matches_scalar(r_devs, t_nets, p)
+
+
+# --------------------------------------------------------------------------
+# cohort planning == scalar planning
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["variable", "variable+batching",
+                                    "constant", "all_cloud"])
+@pytest.mark.parametrize("cache", [None, "plain", "quantized"])
+def test_plan_cohort_matches_plan_profile(policy, cache):
+    fleet = table4_fleet(seed=3, params=CALIBRATED)[:200]
+    mk_cache = {"plain": lambda: PlanCache(),
+                "quantized": lambda: PlanCache(quanta=(0.5, 0.05, 1e6)),
+                None: lambda: None}[cache]
+    worst = max(pr.rtt for pr in fleet)
+    cohort = Planner(CALIBRATED, policy=policy, worst_rtt=worst,
+                     audit=False, cache=mk_cache())
+    scalar = Planner(CALIBRATED, policy=policy, worst_rtt=worst,
+                     audit=False, cache=mk_cache())
+    qd, util = 0.37, 0.5
+    got = cohort.plan_cohort(fleet, qd, util)
+    want = [scalar.plan_profile(pr, qd, util) for pr in fleet]
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        assert g.to_trace_json() == w.to_trace_json()
+        assert (g.batch_admit, g.batch_max_wait, g.batch_latency) \
+            == (w.batch_admit, w.batch_max_wait, w.batch_latency)
+
+
+def test_plan_cohort_requires_hot_loop_mode():
+    planner = Planner(CALIBRATED, policy="variable+batching",
+                      worst_rtt=1.0)        # audit=True default
+    with pytest.raises(ValueError):
+        planner.plan_cohort(table4_fleet(seed=0, params=CALIBRATED)[:2])
+
+
+# --------------------------------------------------------------------------
+# EventWheel
+# --------------------------------------------------------------------------
+def _drain(wheel):
+    """Drain the wheel the way the v2 core does: smallest bucket index
+    first, FIFO (by position) within the bucket — buckets may grow while
+    draining."""
+    out = []
+    while wheel.order:
+        idx = heapq_pop(wheel.order)
+        bucket = wheel.buckets[idx]
+        i = 0
+        while i < len(bucket):
+            out.append(bucket[i])
+            i += 1
+        del wheel.buckets[idx]
+    return out
+
+
+def heapq_pop(heap):
+    import heapq
+    return heapq.heappop(heap)
+
+
+def test_event_wheel_orders_across_buckets_fifo_within():
+    w = EventWheel(1.0)
+    w.push(2.5, 1, "c")
+    w.push(0.2, 1, "a1")
+    w.push(0.9, 1, "a2")     # same bucket as a1, pushed later
+    w.push(0.1, 1, "a3")     # same bucket, later still: FIFO not sorted
+    w.push(1.5, 1, "b")
+    assert len(w) == 5 and bool(w)
+    got = [payload for _, _, payload in _drain(w)]
+    assert got == ["a1", "a2", "a3", "b", "c"]
+    assert len(w) == 0 and not bool(w)
+
+
+def test_event_wheel_push_during_drain_lands_in_future_bucket():
+    w = EventWheel(1.0)
+    w.push(0.5, 0, "first")
+    idx = heapq_pop(w.order)
+    bucket = w.buckets[idx]
+    seen = []
+    i = 0
+    while i < len(bucket):
+        t, _, payload = bucket[i]
+        seen.append(payload)
+        if payload == "first":
+            w.push(t + 0.1, 0, "same-bucket")   # grows the live bucket
+            w.push(t + 5.0, 0, "later")
+        i += 1
+    del w.buckets[idx]
+    assert seen == ["first", "same-bucket"]
+    assert [p for _, _, p in _drain(w)] == ["later"]
+
+
+def test_event_wheel_bulk_push_and_width_validation():
+    with pytest.raises(ValueError):
+        EventWheel(0.0)
+    w = EventWheel(0.25)
+    w.push_times([0.1, 0.2, 0.6, 2.0], kind=2)
+    assert len(w) == 4
+    assert sorted(w.buckets) == [0, 2, 8]
+    assert [t for t, _, _ in w.buckets[0]] == [0.1, 0.2]
+
+
+# --------------------------------------------------------------------------
+# v2 golden baselines (v1's pin lives in test_fleet_sim.py, untouched)
+# --------------------------------------------------------------------------
+def _digest(res):
+    sig = hashlib.sha256()
+    for c in res.completed:
+        sig.update(f"{c.request_id}:{c.completion:.9f}:{c.batched:d};"
+                   .encode())
+    return sig.hexdigest()[:16]
+
+
+def test_v2_golden_trace():
+    """v2's own pinned baseline (exact-record mode exercises the wheel
+    loop).  v2 draws a different arrival rng stream than v1, so these
+    numbers differ from the v1 golden trace by design; what this test
+    guards is v2-to-v2 drift.  Re-record alongside the v1 pin when a
+    deliberate semantic change moves them (docs/sim_core_v2.md)."""
+    res = run_fleet_sim(SimConfig(core="v2", **GOLDEN))
+    golden = {
+        "n_arrivals": res.n_arrivals,
+        "n_completed": len(res.completed),
+        "violations": res.violations,
+        "gpu_seconds": round(res.total_gpu_seconds, 9),
+        "p99": round(res.latency_percentile(99), 9),
+        "digest": _digest(res),
+    }
+    assert golden == V2_GOLDEN
+
+
+V2_GOLDEN = {
+    "n_arrivals": 465,
+    "n_completed": 465,
+    "violations": 4,
+    "gpu_seconds": 236.352,
+    "p99": 8.494425237,
+    "digest": "0a11408760296ce3",
+}
+
+
+def test_v2_fast_lane_matches_wheel_path():
+    """The chunked fast lane is an exact re-expression of the generic
+    wheel loop on its eligible configs: same arrivals, violations,
+    GPU-seconds and completion count (stats shard ingest order differs,
+    so P² percentiles are compared loosely)."""
+    for seed in (7, 1, 2):
+        cfg = SimConfig(core="v2", exact_stats=False,
+                        **{**GOLDEN, "seed": seed})
+        fast_sim = FleetSimulatorV2(cfg)
+        assert fast_sim._fast_eligible()
+        fast = fast_sim.run()
+        wheel_sim = FleetSimulatorV2(cfg)
+        wheel_sim._fast_eligible = lambda: False
+        wheel = wheel_sim.run()
+        assert fast.n_arrivals == wheel.n_arrivals
+        assert fast.violations == wheel.violations
+        assert fast.n_completed() == wheel.n_completed()
+        assert abs(fast.total_gpu_seconds
+                   - wheel.total_gpu_seconds) < 1e-9
+        for q in (50, 99):
+            a, b = fast.latency_percentile(q), wheel.latency_percentile(q)
+            assert abs(a - b) <= 0.05 * max(abs(a), abs(b), 1e-9)
+
+
+def test_v2_fast_lane_timeseries_invariants():
+    """The fast lane's snapshots keep v1's conservation law: every
+    arrival is completed, in flight, queued, or windowed at each tick."""
+    res = run_fleet_sim(SimConfig(core="v2", exact_stats=False, **GOLDEN))
+    assert len(res.timeseries) >= 3
+    for snap in res.timeseries:
+        assert snap["completed"] + snap["in_flight"] == snap["arrivals"]
+        assert snap["gpus"] >= snap["gpus_busy"] >= 0
+        assert 0.0 <= snap["utilization"] <= 1.0 + 1e-9
+    for a, b in zip(res.timeseries, res.timeseries[1:]):
+        assert b["arrivals"] >= a["arrivals"]
+        assert b["violations"] >= a["violations"]
+        assert b["gpu_seconds"] >= a["gpu_seconds"] - 1e-12
+
+
+def test_v1_core_unaffected_by_v2_machinery():
+    """core="v1" (the default) stays the pinned golden trace — the v2
+    subsystem must be completely inert for v1 configs."""
+    res = run_fleet_sim(SimConfig(**GOLDEN))
+    assert (res.n_arrivals, len(res.completed), res.violations,
+            round(res.total_gpu_seconds, 9), _digest(res)) == \
+        (490, 490, 0, 249.312, "af766f3924e39378")
+
+
+# --------------------------------------------------------------------------
+# v1 as oracle: aggregate distributions within tolerance
+# --------------------------------------------------------------------------
+ORACLE = dict(policy="variable+batching", rate=60.0, duration=40.0,
+              gpus_init=30, max_gpus=80, metrics_interval_s=10.0)
+#: documented in docs/sim_core_v2.md: the cores draw different arrival
+#: rng streams, so aggregates agree distributionally.  Count tolerance
+#: covers two independent Poisson draws (~3 sd of the difference);
+#: violation rate is compared absolutely (borderline-SLA configs flip
+#: whole windows); GPU-seconds ride the completion count.
+COUNT_RTOL = 0.10
+VIOL_ATOL = 0.05
+GPU_PER_REQ_RTOL = 0.05
+PCTL_RTOL = 0.15
+
+
+@pytest.mark.parametrize("process", ["poisson", "bursty", "diurnal"])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_v2_aggregates_match_v1_oracle(process, seed):
+    r1 = run_fleet_sim(SimConfig(process=process, seed=seed,
+                                 exact_stats=False, **ORACLE))
+    r2 = run_fleet_sim(SimConfig(process=process, seed=seed, core="v2",
+                                 exact_stats=False, **ORACLE))
+    n1, n2 = r1.n_completed(), r2.n_completed()
+    assert n1 > 0 and n2 > 0
+    assert abs(n1 - n2) <= COUNT_RTOL * max(n1, n2)
+    v1_rate = r1.violations / n1
+    v2_rate = r2.violations / n2
+    assert abs(v1_rate - v2_rate) <= VIOL_ATOL
+    g1 = r1.total_gpu_seconds / n1
+    g2 = r2.total_gpu_seconds / n2
+    assert abs(g1 - g2) <= GPU_PER_REQ_RTOL * max(g1, g2)
+    for q in (50, 99):
+        p1, p2 = r1.latency_percentile(q), r2.latency_percentile(q)
+        assert abs(p1 - p2) <= PCTL_RTOL * max(abs(p1), abs(p2))
+
+
+# --------------------------------------------------------------------------
+# decision-trace replay (field-exact on TRACE_FIELDS)
+# --------------------------------------------------------------------------
+def test_v2_trace_passes_verify_decisions(tmp_path):
+    """Every decision a v2 run records re-derives exactly through a
+    planner rebuilt from the trace header — the cohort-solved entries
+    are bit-identical to the scalar pipeline's."""
+    path = str(tmp_path / "v2.jsonl")
+    res = run_fleet_sim(SimConfig(core="v2", trace_out=path, **GOLDEN))
+    trace = read_trace(path)
+    assert len(trace.plans()) == res.n_arrivals
+    for rec in trace.plans():
+        assert set(rec["decision"]) == set(TRACE_FIELDS)
+    report = verify_decisions(trace)
+    assert report.n_plans == res.n_arrivals
+    assert report.ok, report.to_json()
+
+
+# --------------------------------------------------------------------------
+# streaming-stats shards: merge()/add_many == one scalar stream
+# --------------------------------------------------------------------------
+def _lognormal(seed, n):
+    rng = np.random.default_rng(seed)
+    return [float(x) for x in rng.lognormal(1.0, 0.5, n)]
+
+
+def test_add_many_equals_scalar_adds():
+    xs = _lognormal(11, 4000)
+    one = StreamingLatencyStats()
+    for i, x in enumerate(xs):
+        one.add(x, batched=(i % 3 == 0))
+    bulk = StreamingLatencyStats()
+    step = 257
+    for lo in range(0, len(xs), step):
+        chunk = xs[lo:lo + step]
+        nb = sum(1 for i in range(lo, lo + len(chunk)) if i % 3 == 0)
+        bulk.add_many(chunk, nb)
+    bulk.add_many([], 0)                      # no-op by contract
+    assert (bulk.count, bulk.batched) == (one.count, one.batched)
+    # sum folds per chunk (builtin sum) vs per element: same value up
+    # to float summation order
+    assert math.isclose(bulk.sum, one.sum, rel_tol=1e-12)
+    assert bulk.max == one.max
+    for q in (50.0, 99.0):                    # same ingest order: exact
+        assert bulk.percentile(q) == one.percentile(q)
+
+
+def test_merged_shards_match_single_stream_within_p2_tolerance():
+    """The v2 cohort path folds round-robin shards with merge(); the
+    result must agree with one scalar stream over the same data within
+    the P² estimator's own accuracy."""
+    xs = _lognormal(5, 20000)
+    single = StreamingLatencyStats()
+    shards = [StreamingLatencyStats() for _ in range(4)]
+    for i, x in enumerate(xs):
+        b = i % 5 == 0
+        single.add(x, b)
+        shards[i % 4].add(x, b)
+    merged = StreamingLatencyStats()
+    for s in shards:
+        merged.merge(s)
+    assert merged.count == single.count == len(xs)
+    assert merged.batched == single.batched
+    assert abs(merged.sum - single.sum) < 1e-6 * single.sum
+    assert merged.max == single.max
+    for q in (50.0, 99.0):
+        exact = float(np.percentile(xs, q))
+        assert abs(merged.percentile(q) - exact) <= 0.05 * exact
+        assert (abs(merged.percentile(q) - single.percentile(q))
+                <= 0.05 * exact)
+
+
+def test_p2_merge_exact_while_small():
+    a, b = P2Quantile(0.5), P2Quantile(0.5)
+    for x in (1.0, 5.0):
+        a.add(x)
+    for x in (2.0, 4.0, 3.0):
+        b.add(x)
+    a.merge(b)
+    assert a.n == 5
+    assert a.value() == 3.0                   # exact sample median
+    with pytest.raises(ValueError):
+        a.merge(P2Quantile(0.99))
