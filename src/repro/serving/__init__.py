@@ -10,6 +10,12 @@ from repro.serving.fleet_sim import (  # noqa: F401
     SimConfig,
     run_fleet_sim,
 )
+from repro.serving.mobility import (  # noqa: F401
+    MobilityConfig,
+    MobilityModel,
+    NetShift,
+    SessionLink,
+)
 from repro.serving.replay import (  # noqa: F401
     Trace,
     TraceWriter,

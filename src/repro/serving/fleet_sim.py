@@ -114,14 +114,17 @@ from repro.core.telemetry import (
     poisson_arrivals,
 )
 from repro.serving.event_wheel import EventWheel
+from repro.serving.mobility import MobilityConfig, MobilityModel
 from repro.serving.simulator import CALIBRATED, table4_fleet
 
 # event kinds, in tie-break priority order at equal timestamps: capacity
 # comes online before jobs are dispatched, arrivals before window
-# flushes.  PREEMPT is appended LAST so adding it cannot reorder any
-# pre-preemption event sequence (the golden-trace anchor).
+# flushes.  PREEMPT was appended after the original six so adding it
+# could not reorder any pre-preemption event sequence; NET_SHIFT
+# (serving.mobility) is appended after PREEMPT for the same reason —
+# the golden-trace anchor never sees either.
 (EVT_CAPACITY, EVT_JOB_DONE, EVT_ARRIVAL, EVT_WINDOW, EVT_AUTOSCALE,
- EVT_COMPLETE, EVT_METRICS, EVT_PREEMPT) = range(8)
+ EVT_COMPLETE, EVT_METRICS, EVT_PREEMPT, EVT_NET_SHIFT) = range(9)
 # DISPATCH_MODES is canonical in core.planner (imported above) so the
 # planner and the dispatcher can never disagree on valid modes
 
@@ -193,6 +196,16 @@ class SimConfig:
     shedding: bool = False
     shed_queue_high: float = 0.6
     shed_util_high: float = 0.95
+    #: session network dynamics (serving.mobility, docs/mobility.md):
+    #: per-session RTT/bandwidth drift, WiFi<->cellular handoff and
+    #: disconnect/reconnect windows on a DEDICATED rng stream, surfaced
+    #: as EVT_NET_SHIFT events.  When a session's link degrades past the
+    #: configured thresholds while a job is in flight, the job re-enters
+    #: the planner through Planner.replan_degraded (elapsed-time credit,
+    #: shed valve active) — unless ``mobility.replan`` is False, the
+    #: freeze-at-arrival baseline.  None (default) is bit-identical to
+    #: the pre-mobility simulator (the golden-trace anchor).
+    mobility: Optional["MobilityConfig"] = None
     # telemetry
     metrics_interval_s: float = 5.0
     #: keep every CompletedRequest (the golden-trace default; run-level
@@ -221,12 +234,35 @@ class SimConfig:
     #: (tests/test_sim_core_v2.py), traces verify the same way.
     core: str = "v1"
     #: v2 only: event-wheel bucket width in seconds; None auto-sizes
-    #: from the arrival rate (~a few events per bucket).
+    #: from the arrival rate (~a few events per bucket).  Setting this
+    #: routes v2 through the wheel path (the chunked fast lane ignores
+    #: bucket sizing, so it declares itself incompatible — see
+    #: ``v2_fast``).
     v2_bucket_s: Optional[float] = None
     #: v2 only (exact_stats=False): number of StreamingLatencyStats
     #: shards filled round-robin and merged (P² merge) into the
     #: run-level stream at the end of the run.
     v2_stream_shards: int = 4
+    #: v2 fast-lane policy: "auto" (default) runs the chunked fast lane
+    #: when the config is eligible and falls back LOUDLY to the event
+    #: wheel otherwise (FleetSimResult.fast_lane / fast_lane_blockers
+    #: name the reasons); "require" raises if any option blocks the
+    #: fast lane (nothing can be silently ignored); "off" always runs
+    #: the wheel.
+    v2_fast: str = "auto"
+
+    def validate(self) -> None:
+        """Config cross-checks shared by both cores (raise early, not
+        mid-run).  Core-specific checks (autoscale/preemption guards)
+        stay in the simulator constructors."""
+        if self.core not in ("v1", "v2"):
+            raise ValueError(f"unknown core {self.core!r}; "
+                             f"expected 'v1' or 'v2'")
+        if self.v2_fast not in ("auto", "require", "off"):
+            raise ValueError(f"unknown v2_fast {self.v2_fast!r}; "
+                             f"expected 'auto', 'require' or 'off'")
+        if self.mobility is not None:
+            self.mobility.validate()
 
     def build_capacity(self) -> CloudCapacity:
         if self.capacity is not None:
@@ -255,6 +291,9 @@ class SimRequest:
                                         # attempts (replan-on-preemption)
     preemptions: int = 0                # times a spot reclaim killed its job
     window_joined: float = 0.0          # when it joined its current window
+    where: object = None                # mobility only: the _Window or
+                                        # _Job currently holding this
+                                        # request (None = not replannable)
 
 
 @dataclasses.dataclass(frozen=True, slots=True)
@@ -345,6 +384,8 @@ class GpuPool:
         self.running: Dict[int, _Job] = {}
         self.reclaimed_total = 0        # GPUs lost to spot reclaim
         self.killed_total = 0           # running jobs killed by reclaim
+        self._queue_dead = 0            # killed jobs still parked in the
+                                        # queue structures (lazy cancel)
         self._busy_integral = 0.0
         self._cap_integral = 0.0
         self._last_t = 0.0
@@ -370,9 +411,11 @@ class GpuPool:
 
     # -- queue discipline --------------------------------------------------
     def queue_len(self) -> int:
+        # _queue_dead keeps the count exact under lazy cancellation, so
+        # queue_len()-gated pop loops never drain an all-dead queue
         if self.discipline == "edf":
-            return len(self._heap) + len(self._doomed)
-        return len(self.queue)
+            return len(self._heap) + len(self._doomed) - self._queue_dead
+        return len(self.queue) - self._queue_dead
 
     def _enqueue(self, job: _Job) -> None:
         if self.discipline == "edf":
@@ -410,6 +453,7 @@ class GpuPool:
             dl, seq, job = heapq.heappop(self._heap)
             if job.killed:                # compaction guard (see above)
                 self.queued_service -= job.service
+                self._queue_dead -= 1
                 continue
             if now + job.service > dl + 1e-9:
                 heapq.heappush(self._doomed, (dl, seq, job))
@@ -420,6 +464,7 @@ class GpuPool:
             if not job.killed:
                 return job
             self.queued_service -= job.service
+            self._queue_dead -= 1
 
     def _drain(self, now: float) -> List[Tuple[_Job, float]]:
         started = []
@@ -430,6 +475,9 @@ class GpuPool:
             while q and self.busy < self.capacity:
                 job = q.popleft()
                 self.queued_service -= job.service
+                if job.killed:            # lazily canceled while queued
+                    self._queue_dead -= 1
+                    continue
                 started.append((job, self._start(now, job)))
             return started
         while self.queue_len() and self.busy < self.capacity:
@@ -501,8 +549,31 @@ class GpuPool:
         self._advance(now)
         evicted: List[_Job] = []
         while self.queue_len():
-            evicted.append(self._dequeue(now))
+            job = self._dequeue(now)
+            if job.killed:                # lazily canceled while queued
+                self._queue_dead -= 1
+                continue
+            evicted.append(job)
         return evicted
+
+    def cancel(self, now: float, job: _Job) -> List[Tuple[_Job, float]]:
+        """Withdraw one job this pool owns (mid-flight replan,
+        serving/mobility.py).  Running: free its GPU, refund the UNUSED
+        service (elapsed stays billed — that work was burned, mirroring
+        ``reclaim``) and drain the queue into the freed slot.  Queued:
+        lazy kill — the entry stays parked and is compacted at pop time
+        (the same ``job.killed`` machinery spot reclaim uses); its
+        pending JOB_DONE, if any, becomes a no-op."""
+        self._advance(now)
+        job.killed = True
+        if self.running.pop(id(job), None) is not None:
+            unused = job.service - (now - job.started)
+            self.gpu_seconds -= unused
+            self.weighted_gpu_seconds -= unused * self.cost_weight
+            self.busy -= 1
+            return self._drain(now)
+        self._queue_dead += 1
+        return []
 
     def add_capacity(self, now: float, k: int) -> List[Tuple[_Job, float]]:
         self._advance(now)
@@ -748,6 +819,15 @@ class FleetSimResult:
     plan_calls: int = 0                 # Planner.plan invocations
     plan_cache_hits: int = 0
     plan_cache_misses: int = 0
+    # mobility (serving.mobility; all zero with SimConfig.mobility=None)
+    net_shifts: int = 0                 # NET_SHIFT events applied
+    net_handoffs: int = 0               # WiFi<->cellular jumps
+    net_disconnects: int = 0            # outage windows opened
+    net_replans: int = 0                # mid-flight replans (degraded link)
+    #: v2 only: did the chunked fast lane run?  None on v1; False names
+    #: the blocking options in ``fast_lane_blockers`` (loud fallback)
+    fast_lane: Optional[bool] = None
+    fast_lane_blockers: List[str] = dataclasses.field(default_factory=list)
 
     def n_completed(self) -> int:
         return (self.stream.count if self.stream is not None
@@ -806,6 +886,12 @@ class FleetSimResult:
             "preempted_gpus": self.preempted_gpus,
             "killed_jobs": self.killed_jobs,
             "replans": self.replans,
+            "net_shifts": self.net_shifts,
+            "net_handoffs": self.net_handoffs,
+            "net_disconnects": self.net_disconnects,
+            "net_replans": self.net_replans,
+            "fast_lane": self.fast_lane,
+            "fast_lane_blockers": self.fast_lane_blockers,
             "exact_stats": self.stream is None,
             "n_events": self.n_events,
             "plan_calls": self.plan_calls,
@@ -834,6 +920,7 @@ def _make_arrivals(cfg: SimConfig) -> Iterator[float]:
 
 class FleetSimulator:
     def __init__(self, cfg: SimConfig):
+        cfg.validate()
         self.cfg = cfg
         self.capacity_spec = cfg.build_capacity()
         # CostParams.r_cloud is the REFERENCE rate: for a heterogeneous
@@ -944,6 +1031,15 @@ class FleetSimulator:
         self.n_rejected = 0
         self.n_degraded = 0
         self.n_replans = 0
+        # session network dynamics (serving.mobility): its OWN rng
+        # stream, so mobility=None never draws and stays bit-identical
+        self._mobility: Optional[MobilityModel] = (
+            MobilityModel(cfg.mobility, fleet, cfg.seed)
+            if cfg.mobility is not None else None)
+        #: device_id -> {request_id: SimRequest} for requests whose
+        #: cloud work is still in flight (the replan candidates)
+        self._session_live: Dict[str, Dict[str, SimRequest]] = {}
+        self.n_net_replans = 0
         # structured decision trace (serving.replay): every write is
         # behind `if self._trace is not None`, so the default path adds
         # one predictable branch per hook and no allocation
@@ -959,7 +1055,9 @@ class FleetSimulator:
                  "preempt_rate": cfg.preempt_rate,
                  "preempt_requeue": cfg.preempt_requeue,
                  "shedding": cfg.shedding,
-                 "adaptive_sla": cfg.adaptive_sla})
+                 "adaptive_sla": cfg.adaptive_sla,
+                 "mobility": cfg.mobility.to_json()
+                 if cfg.mobility is not None else None})
 
     # -- event plumbing ----------------------------------------------------
     def _push(self, t: float, kind: int, payload=None) -> None:
@@ -992,6 +1090,8 @@ class FleetSimulator:
                 self._push(float(when), EVT_PREEMPT, (name, int(k)))
         if cfg.preempt_rate > 0:
             self._arm_preempt(0.0)
+        if self._mobility is not None:
+            self._arm_net_shift(0.0)
 
     # -- main loop ---------------------------------------------------------
     def run(self) -> FleetSimResult:
@@ -1006,7 +1106,8 @@ class FleetSimulator:
         # times per fleet-scale simulation
         handlers = (self._on_capacity, self._on_job_done,
                     self._on_arrival, self._on_window, self._on_autoscale,
-                    self._on_complete, self._on_metrics, self._on_preempt)
+                    self._on_complete, self._on_metrics, self._on_preempt,
+                    self._on_net_shift)
         events = self._events
         pop = heapq.heappop
         t = 0.0
@@ -1044,7 +1145,15 @@ class FleetSimulator:
             stream=self.stream, n_events=self.n_events,
             plan_calls=self.planner.plan_calls,
             plan_cache_hits=cache.hits if cache else 0,
-            plan_cache_misses=cache.misses if cache else 0)
+            plan_cache_misses=cache.misses if cache else 0,
+            net_shifts=self._mobility.n_shifts if self._mobility else 0,
+            net_handoffs=self._mobility.n_handoffs if self._mobility else 0,
+            net_disconnects=(self._mobility.n_disconnects
+                             if self._mobility else 0),
+            net_replans=self.n_net_replans,
+            fast_lane=getattr(self, "_fast_lane", None),
+            fast_lane_blockers=list(getattr(self, "_fast_blockers_rec",
+                                            ())))
 
     # -- adaptive SLA ------------------------------------------------------
     def _set_t_lim(self, t_lim: float) -> None:
@@ -1060,6 +1169,10 @@ class FleetSimulator:
     # -- handlers ----------------------------------------------------------
     def _on_arrival(self, t: float, _payload=None) -> None:
         prof = next(self.devices)
+        if self._mobility is not None:
+            # the planner sees the session's LIVE link, not the fleet
+            # anchor (an outage adds its remaining wait to the rtt)
+            prof = self._mobility.live_profile(prof, t)
         rid = f"r{self.n_arrivals}"
         self.n_arrivals += 1
         # one request in, one decision out: split solve, quantization,
@@ -1096,10 +1209,15 @@ class FleetSimulator:
             done = t + e2e_latency(0, prof.r_dev, self.p, prof.rtt,
                                    c_batch=1.0)
             self._push(done, EVT_COMPLETE, req)
-        elif decision.batch_admit:
-            self._join_window(t, req, decision.batch_max_wait)
         else:
-            self._dispatch(t, [req])
+            if self._mobility is not None:
+                # cloud work in flight: a NET_SHIFT on this session may
+                # pull the request back through the planner
+                self._session_live.setdefault(prof.device_id, {})[rid] = req
+            if decision.batch_admit:
+                self._join_window(t, req, decision.batch_max_wait)
+            else:
+                self._dispatch(t, [req])
 
         self._schedule_next_arrival()
 
@@ -1119,9 +1237,13 @@ class FleetSimulator:
             w = _Window(group=g, version=next(self._win_version),
                         members=[req], flush_at=stale_deadline)
             self.windows[g] = w
+            if self._mobility is not None:
+                req.where = w
             self._push(w.flush_at, EVT_WINDOW, (g, w.version))
             return
         w.members.append(req)
+        if self._mobility is not None:
+            req.where = w
         if len(w.members) >= self.cfg.batch_size:
             self._flush_window(t, w)
         elif stale_deadline < w.flush_at:
@@ -1208,6 +1330,9 @@ class FleetSimulator:
         job = _Job(group=n_final, members=members, service=service,
                    submitted=t, deadline=deadline, gpu_class=cls.name,
                    uid=next(self._job_uid))
+        if self._mobility is not None:
+            for m in members:
+                m.where = job
         finish = self.pool.submit(t, job)
         if finish is not None:
             self._push(finish, EVT_JOB_DONE, job)
@@ -1224,11 +1349,21 @@ class FleetSimulator:
         events = self._events
         seq = self._seq
         push = heapq.heappush                     # inlined _push
+        mob = self._mobility
         for m in job.members:
             m.queue_wait += qw
             prof = m.profile
             r_dev = prof.r_dev
-            done = (t + prof.rtt
+            if mob is None:
+                rtt = prof.rtt
+            else:
+                # results ship over the session's LIVE link (an outage
+                # adds its remaining wait), not the rtt planned at
+                # arrival — this is what the freeze-at-arrival baseline
+                # pays for not replanning
+                rtt = mob.ship_rtt(prof.device_id, t, prof.rtt)
+                m.where = None
+            done = (t + rtt
                     + (n_total - m.assignment.n_final - m.n_credit)
                     / r_dev
                     + k_decode / r_dev)
@@ -1321,7 +1456,7 @@ class FleetSimulator:
             self._replan_members(t, job.members, n_done)
 
     def _replan_members(self, t: float, members: List[SimRequest],
-                        n_done: int) -> None:
+                        n_done: int, source: str = "preempt") -> None:
         """Re-enter killed members through the planner: elapsed-time
         credit (``n_done`` banked iterations each) under each member's
         tightened remaining deadline.  The replan decides where the
@@ -1332,28 +1467,63 @@ class FleetSimulator:
         dispatches now.  Tight members whose replans land in the same
         quantized group re-dispatch as ONE batch: re-splitting a killed
         batch into solo jobs would multiply the queue load the reclaim
-        caused."""
+        caused.
+
+        ``source="net-shift"`` (serving.mobility) routes through
+        ``planner.replan_degraded`` instead: the same elapsed-credit
+        machinery, but the member's profile carries the LIVE link and
+        the shed valve stays active — a hopeless link degrades to a
+        pure-local finish instead of shipping a split that cannot land
+        (an admitted request is never dropped: "reject" here means no
+        further cloud service, not no service)."""
         regroup: Dict[int, List[SimRequest]] = {}
+        net = source != "preempt"
         for m in members:
             m.n_credit += n_done
             d = self.tracker.get(m.request_id)
             time_left = (d.deadline - t) if d is not None else 0.0
             qd_hint = self.pool.queue_delay_estimate()
-            decision = self.planner.replan_preempted(
-                PlanRequest(
-                    device=m.profile, request_id=m.request_id,
-                    queue_delay_hint=qd_hint),
-                n_done=m.n_credit, time_left=time_left)
+            util_hint = 0.0
+            if net:
+                if self.planner.shed_policy is not None:
+                    cap_now = self.pool.total_capacity
+                    util_hint = (self.pool.total_busy / cap_now
+                                 if cap_now else 1.0)
+                decision = self.planner.replan_degraded(
+                    PlanRequest(
+                        device=m.profile, request_id=m.request_id,
+                        queue_delay_hint=qd_hint,
+                        utilization_hint=util_hint),
+                    n_done=m.n_credit, time_left=time_left)
+            else:
+                decision = self.planner.replan_preempted(
+                    PlanRequest(
+                        device=m.profile, request_id=m.request_id,
+                        queue_delay_hint=qd_hint),
+                    n_done=m.n_credit, time_left=time_left)
             if self._trace is not None:
                 self._trace.replan(t, m.request_id,
                                    dataclasses.asdict(m.profile),
                                    m.n_credit, time_left, qd_hint,
-                                   decision)
-            m.assignment = decision.assignment()
+                                   decision, source=source,
+                                   utilization_hint=util_hint)
             self.n_replans += 1
+            if net:
+                self.n_net_replans += 1
+                if decision.action == "degrade-to-local":
+                    self.n_degraded += 1
+            if decision.action == "reject":
+                # mid-flight shed: no winnable cloud plan remains; the
+                # device finishes the remainder best-effort
+                m.assignment = dataclasses.replace(
+                    decision.assignment(), n_final=0)
+            else:
+                m.assignment = decision.assignment()
             if m.assignment.n_final <= 0:
                 # the device can finish the remainder inside the budget
                 # (or nothing remains): ship the partial latent + decode
+                if self._mobility is not None:
+                    m.where = None
                 done = (t + m.profile.rtt
                         + (self.p.n_total - m.n_credit) / m.profile.r_dev
                         + self.p.k_decode / m.profile.r_dev)
@@ -1364,6 +1534,112 @@ class FleetSimulator:
                 regroup.setdefault(m.assignment.n_final, []).append(m)
         for group in regroup.values():
             self._dispatch(t, group)
+
+    # -- session network dynamics (serving.mobility) -----------------------
+    def _arm_net_shift(self, t: float) -> None:
+        """Schedule the next fleet-wide network shift (the superposed
+        per-session Poisson process, on the mobility rng stream)."""
+        gap = self._mobility.next_gap()
+        if gap is not None:
+            self._push(t + gap, EVT_NET_SHIFT, None)
+
+    def _on_net_shift(self, t: float, payload) -> None:
+        """A session's link shifts.  ``payload`` is None for a drawn
+        shift (drift / handoff / disconnect) or a device_id for a
+        scheduled reconnect (the outage window closing — bookkeeping
+        only, no rng).  With ``mobility.replan`` the shifted session's
+        in-flight requests re-enter the planner when the link moved past
+        the replan thresholds; without it (the freeze-at-arrival
+        baseline) the SAME shift sequence plays out and stale splits pay
+        the live link at ship time."""
+        mob = self._mobility
+        if mob is None:
+            return
+        if payload is not None:
+            link = mob.sessions[payload]
+            if link.down_until and t >= link.down_until - 1e-9:
+                shift = mob.reconnect(t, payload)
+                if self._trace is not None:
+                    self._trace.net_shift(t, shift.to_json())
+            return
+        shift = mob.step(t)
+        if shift is not None:
+            if self._trace is not None:
+                self._trace.net_shift(t, shift.to_json())
+            if shift.kind == "disconnect":
+                self._push(shift.down_until, EVT_NET_SHIFT,
+                           shift.device_id)
+            if mob.cfg.replan:
+                self._net_replan_session(t, shift.device_id)
+        if self._active():
+            self._arm_net_shift(t)
+
+    def _net_replan_session(self, t: float, device_id: str) -> None:
+        """Pull the shifted session's DEGRADED in-flight requests out of
+        wherever they are parked (batching window or cloud job) and
+        re-enter each through ``_replan_members(source="net-shift")``.
+
+        Accounting mirrors ``_requeue_killed``: a withdrawn member banks
+        ``n_done`` credit for cloud iterations its started job already
+        ran, refunds modeled service that will never run for it, and
+        keeps what was burned.  One deliberate conservatism: when a
+        member leaves a multi-member batch that keeps running, its slot
+        still burns modeled GPU time (the batch's service is unchanged)
+        — withdrawing mid-batch is not free.
+        """
+        mob = self._mobility
+        live = self._session_live.get(device_id)
+        if not live:
+            return
+        for m in list(live.values()):
+            loc = m.where
+            if loc is None:
+                continue
+            prof = m.profile
+            if not mob.degraded(device_id, prof.rtt, prof.bandwidth, t):
+                continue
+            n_done = 0
+            if isinstance(loc, _Window):
+                # still batching: leave the window (delete it if emptied
+                # — its pending EVT_WINDOW goes stale via the version
+                # check) and bank the wait
+                loc.members.remove(m)
+                m.window_wait += t - m.window_joined
+                if not loc.members:
+                    del self.windows[loc.group]
+            else:
+                job: _Job = loc
+                if job.killed:              # already canceled/reclaimed
+                    m.where = None
+                    continue
+                b = len(job.members)
+                job.members.remove(m)
+                cls = self.capacity_spec[job.gpu_class]
+                started = job.started >= 0
+                if started:
+                    elapsed = t - job.started
+                    unused = job.service - elapsed
+                    n_done = max(0, min(job.group,
+                                        int(elapsed * cls.r_cloud
+                                            / m.batch_slowdown)))
+                    m.cloud_service -= unused
+                    m.queue_wait += job.started - job.submitted
+                else:
+                    unused = job.service
+                    m.cloud_service -= job.service
+                    m.queue_wait += t - job.submitted
+                if b == 1:
+                    # sole member: cancel the job outright.  Running:
+                    # the pool refunds the unused service and backfills
+                    # the freed GPU; queued: lazy kill, compacted at pop
+                    m.gpu_seconds -= unused
+                    m.gpu_cost -= unused * cls.cost_weight
+                    for nxt, finish in self.pool.pools[
+                            job.gpu_class].cancel(t, job):
+                        self._push(finish, EVT_JOB_DONE, nxt)
+            m.where = None
+            m.profile = mob.live_profile(prof, t)
+            self._replan_members(t, [m], n_done, source="net-shift")
 
     def _preempt_discounts(self) -> Optional[Dict[str, float]]:
         """Per-class effective-rate discounts for the §4.5 re-plan:
@@ -1462,6 +1738,10 @@ class FleetSimulator:
             self._push(t + cfg.autoscale_interval_s, EVT_AUTOSCALE)
 
     def _on_complete(self, t: float, req: SimRequest) -> None:
+        if self._mobility is not None:
+            live = self._session_live.get(req.profile.device_id)
+            if live is not None:
+                live.pop(req.request_id, None)
         late = self.tracker.close(req.request_id, t)
         latency = t - req.arrival
         if self.stream is not None:
@@ -1642,11 +1922,18 @@ class FleetSimulatorV2(FleetSimulator):
         n_total = self.p.n_total
         k_decode = self.p.k_decode
         push = self._wheel.push
+        mob = self._mobility
         for m in job.members:
             m.queue_wait += qw
             prof = m.profile
             r_dev = prof.r_dev
-            done = (t + prof.rtt
+            if mob is None:
+                rtt = prof.rtt
+            else:
+                # live link at ship time (see the v1 handler)
+                rtt = mob.ship_rtt(prof.device_id, t, prof.rtt)
+                m.where = None
+            done = (t + rtt
                     + (n_total - m.assignment.n_final - m.n_credit)
                     / r_dev
                     + k_decode / r_dev)
@@ -1659,6 +1946,10 @@ class FleetSimulatorV2(FleetSimulator):
         if shards is None:                 # exact_stats: v1 record path
             super()._on_complete(t, req)
             return
+        if self._mobility is not None:
+            live = self._session_live.get(req.profile.device_id)
+            if live is not None:
+                live.pop(req.request_id, None)
         self.tracker.close(req.request_id, t)
         latency = t - req.arrival
         i = self._shard_i
@@ -1667,21 +1958,44 @@ class FleetSimulatorV2(FleetSimulator):
         self._recent_lat.append(latency)
 
     # -- vectorized fast lane (docs/sim_core_v2.md) ------------------------
-    def _fast_eligible(self) -> bool:
-        """The cohort fast lane covers the modal throughput config: FIFO
-        dispatch on a single GPU class, streaming stats, no decision
-        trace, no preemption, no shedding, no adaptive SLA.  Everything
-        else falls back to the generic wheel loop (same v2 semantics,
-        event-at-a-time)."""
+    def _fast_blockers(self) -> List[str]:
+        """Config options the chunked fast lane does NOT implement.  The
+        fast lane covers the modal throughput config: FIFO dispatch on a
+        single GPU class, streaming stats, no decision trace, no
+        preemption, no shedding, no adaptive SLA, no mobility, auto
+        bucket sizing.  Anything listed here falls back to the generic
+        wheel loop (same v2 semantics, event-at-a-time) — loudly:
+        ``FleetSimResult.fast_lane_blockers`` records this list, and
+        ``v2_fast="require"`` raises on it, so no option is ever
+        silently ignored."""
         cfg = self.cfg
-        return (self._trace is None
-                and self.stream is not None
-                and not self._preempting
-                and cfg.dispatch == "fifo"
-                and self.pool._single_pool is not None
-                and self.planner.shed_policy is None
-                and self.sla_ctl is None
-                and cfg.sampling in ("cycle", "uniform"))
+        blockers = []
+        if self._trace is not None:
+            blockers.append("trace_out")
+        if self.stream is None:
+            blockers.append("exact_stats")
+        if self._preempting:
+            blockers.append("preemption")
+        if cfg.dispatch != "fifo":
+            blockers.append(f"dispatch={cfg.dispatch}")
+        if self.pool._single_pool is None:
+            blockers.append("multi-class capacity")
+        if self.planner.shed_policy is not None:
+            blockers.append("shedding")
+        if self.sla_ctl is not None:
+            blockers.append("adaptive_sla")
+        if cfg.sampling not in ("cycle", "uniform"):
+            blockers.append(f"sampling={cfg.sampling}")
+        if self._mobility is not None:
+            blockers.append("mobility")
+        if cfg.v2_bucket_s is not None:
+            # explicit bucket sizing asks for the wheel; the fast lane
+            # has no wheel and would silently ignore it
+            blockers.append("v2_bucket_s")
+        return blockers
+
+    def _fast_eligible(self) -> bool:
+        return not self._fast_blockers()
 
     def _run_fast(self) -> FleetSimResult:
         """Cohort-vectorized main loop.
@@ -2129,14 +2443,25 @@ class FleetSimulatorV2(FleetSimulator):
     # -- main loop ---------------------------------------------------------
     def run(self) -> FleetSimResult:
         cfg = self.cfg
-        if self._fast_eligible():
+        blockers = self._fast_blockers()
+        if cfg.v2_fast == "require" and blockers:
+            raise ValueError(
+                f"v2_fast='require' but the fast lane cannot run this "
+                f"config; blocked by: {', '.join(blockers)}")
+        if cfg.v2_fast != "off" and self._fast_eligible():
+            self._fast_lane = True
+            self._fast_blockers_rec = []
             return self._run_fast()
+        # loud fallback: the wheel path runs, and the result names why
+        self._fast_lane = False
+        self._fast_blockers_rec = blockers if blockers else ["v2_fast=off"]
         self._refill_arrivals()
         self._arm_recurring(cfg)
 
         handlers = (self._on_capacity, self._on_job_done,
                     self._on_arrival, self._on_window, self._on_autoscale,
-                    self._on_complete, self._on_metrics, self._on_preempt)
+                    self._on_complete, self._on_metrics, self._on_preempt,
+                    self._on_net_shift)
         wheel = self._wheel
         buckets = wheel.buckets
         order = wheel.order

@@ -8,12 +8,14 @@ compiled programs.  This module is the bridge (ROADMAP item 1):
    a structured JSONL trace of every decision it makes: one ``plan``
    record per arrival (the ``Planner.plan`` decision, serialized via
    ``PlanDecision.to_trace_json``), one ``replan`` record per
-   preemption-driven ``Planner.replan_preempted`` decision, one
-   ``dispatch`` record per submitted cloud job (the ``(n_final, batch)``
-   group, its modeled service seconds and executing class), and one
-   ``preempt`` record per spot reclaim.  The header embeds the planner
-   config (``Planner.config_json``), so the whole trace is
-   self-describing.
+   ``Planner.replan_preempted`` / ``Planner.replan_degraded`` decision
+   (preemption- and mobility-driven; the latter tagged
+   ``source="net-shift"``), one ``dispatch`` record per submitted cloud
+   job (the ``(n_final, batch)`` group, its modeled service seconds and
+   executing class), one ``preempt`` record per spot reclaim and one
+   ``net_shift`` record per applied session network shift
+   (serving.mobility).  The header embeds the planner config
+   (``Planner.config_json``), so the whole trace is self-describing.
 
 2. **Verify decisions** — ``verify_decisions`` rebuilds the planner from
    the header config and re-derives every recorded decision from its
@@ -59,7 +61,8 @@ from repro.core.planner import PlanDecision, Planner, PlanRequest
 TRACE_VERSION = 1
 
 #: record kinds a trace may contain, in the order they first appear
-TRACE_KINDS = ("header", "plan", "replan", "dispatch", "preempt")
+TRACE_KINDS = ("header", "plan", "replan", "dispatch", "preempt",
+               "net_shift")
 
 
 # --------------------------------------------------------------------------
@@ -101,12 +104,31 @@ class TraceWriter:
 
     def replan(self, t: float, request_id: str, profile: Dict[str, Any],
                n_done: int, time_left: float, queue_delay_hint: float,
-               decision: PlanDecision) -> None:
-        self.write({"kind": "replan", "t": t, "request_id": request_id,
-                    "profile": profile, "n_done": n_done,
-                    "time_left": time_left,
-                    "queue_delay_hint": queue_delay_hint,
-                    "decision": decision.to_trace_json()})
+               decision: PlanDecision, source: str = "preempt",
+               utilization_hint: float = 0.0) -> None:
+        rec = {"kind": "replan", "t": t, "request_id": request_id,
+               "profile": profile, "n_done": n_done,
+               "time_left": time_left,
+               "queue_delay_hint": queue_delay_hint,
+               "decision": decision.to_trace_json()}
+        if source != "preempt":
+            # extra keys only for non-preemption sources, so preemption
+            # replan records stay byte-identical to pre-mobility traces
+            rec["source"] = source
+            rec["utilization_hint"] = utilization_hint
+        self.write(rec)
+
+    def net_shift(self, t: float, shift: Dict[str, Any]) -> None:
+        """One applied session network shift (mobility.NetShift.to_json);
+        informational — ``verify_decisions`` re-derives the *replans* a
+        shift causes, the shift record documents why they exist.  The
+        shift's own kind (drift/handoff/disconnect/reconnect) lands
+        under ``"shift"`` so the record kind stays ``"net_shift"``."""
+        rec = dict(shift)
+        rec["shift"] = rec.pop("kind")
+        rec["kind"] = "net_shift"
+        rec["t"] = t
+        self.write(rec)
 
     def dispatch(self, t: float, n_final: int, members: List[str],
                  c_batch: float, gpu_class: str, cloud_rate: float,
@@ -151,6 +173,9 @@ class Trace:
 
     def preempts(self) -> List[Dict[str, Any]]:
         return self.of_kind("preempt")
+
+    def net_shifts(self) -> List[Dict[str, Any]]:
+        return self.of_kind("net_shift")
 
     def planner(self) -> Planner:
         """Rebuild the recording run's planner from the header config."""
@@ -245,11 +270,23 @@ def verify_decisions(trace: Trace,
         elif rec["kind"] == "replan":
             n_replans += 1
             want = rec["decision"]
-            got = planner.replan_preempted(
-                PlanRequest(device=_device_from_json(rec["profile"]),
-                            request_id=rec["request_id"],
-                            queue_delay_hint=rec["queue_delay_hint"]),
-                n_done=rec["n_done"], time_left=rec["time_left"])
+            if rec.get("source") == "net-shift":
+                # mobility-driven replan (planner.replan_degraded): the
+                # shed valve ran, so re-derivation needs the recorded
+                # utilization hint too
+                got = planner.replan_degraded(
+                    PlanRequest(
+                        device=_device_from_json(rec["profile"]),
+                        request_id=rec["request_id"],
+                        queue_delay_hint=rec["queue_delay_hint"],
+                        utilization_hint=rec.get("utilization_hint", 0.0)),
+                    n_done=rec["n_done"], time_left=rec["time_left"])
+            else:
+                got = planner.replan_preempted(
+                    PlanRequest(device=_device_from_json(rec["profile"]),
+                                request_id=rec["request_id"],
+                                queue_delay_hint=rec["queue_delay_hint"]),
+                    n_done=rec["n_done"], time_left=rec["time_left"])
         else:
             continue
         diffs = _diff_fields(i, rec["kind"], want, got.to_trace_json())

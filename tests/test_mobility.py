@@ -1,0 +1,420 @@
+"""Mobility subsystem: session network dynamics + mid-flight replans
+(docs/mobility.md).
+
+Covers the PR-8 acceptance criteria:
+  * ``mobility=None`` (the default) is BIT-IDENTICAL to the
+    pre-mobility simulator — the PR-2 golden digest is pinned.
+  * ``MobilityModel`` unit behavior: drift mean-reversion, handoff
+    anchor resets, disconnect/outage windows, live-profile outage
+    surcharge, and the freeze/replan arms seeing IDENTICAL weather.
+  * ``Planner.replan_degraded`` deadline-credit math and the
+    degrade-ceiling invariant (property-tested).
+  * end-to-end: NET_SHIFT replans land in the decision trace and
+    re-derive field-exactly through ``replay.verify_decisions`` on
+    BOTH cores; the v2 fast lane declares mobility a blocker and
+    ``v2_fast="require"`` refuses loudly.
+  * ``GpuPool.cancel`` withdraw accounting (refund + lazy queue kill).
+
+Same house style as tests/test_preemption.py: fixed cases everywhere,
+hypothesis where a property is worth searching.
+"""
+import hashlib
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.planner import PlanRequest, Planner, ShedPolicy
+from repro.core.telemetry import DeviceProfile
+from repro.serving.fleet_sim import GpuPool, SimConfig, _Job, run_fleet_sim
+from repro.serving.mobility import (
+    MOBILITY_SEED_SALT,
+    MobilityConfig,
+    MobilityModel,
+)
+from repro.serving.replay import read_trace, verify_decisions
+from repro.serving.simulator import CALIBRATED
+
+GOLDEN = dict(policy="variable+batching", rate=12.0, duration=40.0,
+              seed=7, gpus_init=10, max_gpus=32, metrics_interval_s=10.0)
+
+#: A network-churny serving config both cores replan under: drift alone
+#: rarely crosses the 1.5x rtt threshold, so handoffs (4x rtt) and
+#: outages carry the replan traffic.
+MOBILE = MobilityConfig(drift_interval_s=10.0, drift_sigma=0.4,
+                        handoff_rate=0.004, disconnect_rate=0.002,
+                        outage_mean_s=6.0)
+CHURN = dict(policy="variable+batching", rate=20.0, duration=40.0,
+             seed=3, gpus_init=6, max_gpus=16, metrics_interval_s=10.0,
+             shedding=True)
+
+
+def _fleet(n=3):
+    return [DeviceProfile(f"d{i}", r_dev=2.25, rtt=0.3, bandwidth=40.0,
+                          k_decode=CALIBRATED.k_decode)
+            for i in range(n)]
+
+
+def _digest(res):
+    sig = hashlib.sha256()
+    for c in res.completed:
+        sig.update(f"{c.request_id}:{c.completion:.9f}:{c.batched:d};"
+                   .encode())
+    return sig.hexdigest()[:16]
+
+
+# --------------------------------------------------------------------------
+# mobility=None is bit-identical to the pre-mobility simulator
+# --------------------------------------------------------------------------
+def test_mobility_none_keeps_golden_trace():
+    """The PR-2 golden digest, with mobility explicitly off: copied
+    verbatim from tests/test_fleet_sim.py::test_golden_trace."""
+    res = run_fleet_sim(SimConfig(mobility=None, **GOLDEN))
+    assert (res.n_arrivals, len(res.completed), res.violations,
+            round(res.total_gpu_seconds, 9), _digest(res)) \
+        == (490, 490, 0, 249.312, "af766f3924e39378")
+    assert res.net_shifts == 0 and res.net_replans == 0
+
+
+def test_mobility_rng_stream_is_isolated():
+    """Enabling mobility never perturbs arrival sampling: same seed,
+    same arrival count and ids, with and without the model."""
+    base = run_fleet_sim(SimConfig(**GOLDEN))
+    mob = run_fleet_sim(SimConfig(mobility=MOBILE, **GOLDEN))
+    assert mob.n_arrivals == base.n_arrivals
+    assert mob.net_shifts > 0
+
+
+# --------------------------------------------------------------------------
+# config validation (raise early, not mid-run)
+# --------------------------------------------------------------------------
+def test_mobility_config_validates():
+    for bad in (dict(drift_interval_s=0.0), dict(drift_sigma=-1.0),
+                dict(drift_revert=1.5), dict(handoff_rate=-0.1),
+                dict(cellular_rtt_factor=0.5),
+                dict(cellular_bw_factor=0.0), dict(outage_mean_s=0.0),
+                dict(replan_rtt_factor=0.9)):
+        with pytest.raises(ValueError):
+            MobilityConfig(**bad).validate()
+    MOBILE.validate()                       # the test config is sound
+    payload = MOBILE.to_json()
+    assert payload["handoff_rate"] == 0.004 and payload["replan"] is True
+
+
+def test_sim_config_validates_core_and_fast_lane():
+    with pytest.raises(ValueError, match="unknown simulation core"):
+        run_fleet_sim(SimConfig(core="v3", **GOLDEN))
+    with pytest.raises(ValueError, match="v2_fast"):
+        run_fleet_sim(SimConfig(core="v2", v2_fast="sometimes", **GOLDEN))
+    with pytest.raises(ValueError, match="drift_interval_s"):
+        run_fleet_sim(SimConfig(
+            mobility=MobilityConfig(drift_interval_s=-1.0), **GOLDEN))
+
+
+# --------------------------------------------------------------------------
+# MobilityModel: the three shift kinds
+# --------------------------------------------------------------------------
+def test_drift_reverts_to_anchor_without_noise():
+    """sigma=0 leaves pure mean reversion: each drift step contracts
+    log-distance to the anchor by exactly (1 - drift_revert)."""
+    cfg = MobilityConfig(drift_interval_s=1.0, drift_sigma=0.0,
+                         drift_revert=0.5)
+    model = MobilityModel(cfg, _fleet(1), seed=0)
+    link = model.sessions["d0"]
+    link.rtt, link.bandwidth = link.base_rtt * 8.0, link.base_bw / 8.0
+    for k in (1, 2, 3):                 # rtt -> anchor * 8^(1/2^k)
+        shift = model.step(0.0)         # single session, drift-only
+        assert shift is not None and shift.kind == "drift"
+        assert link.rtt == pytest.approx(link.base_rtt * 8.0 ** (0.5 ** k))
+        assert link.bandwidth == pytest.approx(
+            link.base_bw / 8.0 ** (0.5 ** k))
+    assert model.n_drifts == 3 and model.n_shifts == 3
+
+
+def test_handoff_toggles_network_and_resets_anchors():
+    cfg = MobilityConfig(cellular_rtt_factor=4.0, cellular_bw_factor=0.125)
+    model = MobilityModel(cfg, _fleet(1), seed=0)
+    link = model.sessions["d0"]
+    link.rtt = 999.0                    # drifted far off; handoff resets
+    shift = model._handoff(1.0, link)
+    assert link.network == "cellular" and shift.network == "cellular"
+    assert link.rtt == pytest.approx(link.base_rtt * 4.0)
+    assert link.bandwidth == pytest.approx(link.base_bw * 0.125)
+    model._handoff(2.0, link)
+    assert link.network == "wifi"
+    assert link.rtt == pytest.approx(link.base_rtt)
+    assert model.n_handoffs == 2
+
+
+def test_disconnect_outage_live_profile_and_reconnect():
+    cfg = MobilityConfig(disconnect_rate=1.0, outage_mean_s=5.0)
+    model = MobilityModel(cfg, _fleet(1), seed=7)
+    link = model.sessions["d0"]
+    prof = _fleet(1)[0]
+    shift = model._disconnect(10.0, link)
+    assert shift.kind == "disconnect" and link.down_until > 10.0
+    # anything shipped during the outage pays the remaining window
+    live = model.live_profile(prof, 10.0)
+    assert live.rtt == pytest.approx(link.rtt + (link.down_until - 10.0))
+    assert model.ship_rtt("d0", 10.0, 0.0) == pytest.approx(live.rtt)
+    assert model.degraded("d0", prof.rtt, prof.bandwidth, 10.0)
+    # a draw landing on a down session is a dead draw (but still burns
+    # the same rng), so freeze/replan arms stay on identical weather
+    assert model.step(10.5) is None
+    model.reconnect(link.down_until, "d0")
+    assert link.down_until == 0.0
+    assert model.ship_rtt("d0", 20.0, 0.0) == pytest.approx(link.rtt)
+
+
+def test_degraded_thresholds():
+    model = MobilityModel(MobilityConfig(replan_rtt_factor=1.5,
+                                         replan_bw_factor=2.0),
+                          _fleet(1), seed=0)
+    link = model.sessions["d0"]
+    planned_rtt, planned_bw = link.rtt, link.bandwidth
+    assert not model.degraded("d0", planned_rtt, planned_bw, 0.0)
+    link.rtt = planned_rtt * 1.49
+    assert not model.degraded("d0", planned_rtt, planned_bw, 0.0)
+    link.rtt = planned_rtt * 1.51
+    assert model.degraded("d0", planned_rtt, planned_bw, 0.0)
+    link.rtt = planned_rtt
+    link.bandwidth = planned_bw / 2.1   # planned bw > 2x live bw
+    assert model.degraded("d0", planned_rtt, planned_bw, 0.0)
+    assert not model.degraded("unknown-device", 1.0, 1.0, 0.0)
+
+
+def test_next_gap_superposes_fleet_rates():
+    assert MobilityModel(MobilityConfig(handoff_rate=0.0,
+                                        disconnect_rate=0.0,
+                                        drift_interval_s=10.0),
+                         [], seed=0).next_gap() is None
+    model = MobilityModel(MobilityConfig(drift_interval_s=10.0),
+                          _fleet(100), seed=0)
+    gaps = [model.next_gap() for _ in range(200)]
+    # fleet rate = 100 * 0.1 = 10/s; the mean gap is ~0.1s
+    assert 0.05 < sum(gaps) / len(gaps) < 0.2
+
+
+def test_seed_salt_is_distinct():
+    assert MOBILITY_SEED_SALT not in (0x5EED, 0, 1)
+
+
+# --------------------------------------------------------------------------
+# freeze and replan arms see IDENTICAL weather
+# --------------------------------------------------------------------------
+def test_freeze_and_replan_arms_share_shift_sequence(tmp_path):
+    """The A/B comparison the bench pins is fair: the replan flag
+    changes scheduler behavior only, never the network weather."""
+    paths = {}
+    for arm in (True, False):
+        path = str(tmp_path / f"arm_{arm}.jsonl")
+        run_fleet_sim(SimConfig(
+            mobility=MobilityConfig(
+                **{**MOBILE.to_json(), "replan": arm}),
+            trace_out=path, **CHURN))
+        paths[arm] = [
+            {k: v for k, v in rec.items() if k != "t"}
+            for rec in read_trace(path).net_shifts()
+            if rec["shift"] != "reconnect"]     # replans can reshuffle
+    assert paths[True] == paths[False]          # reconnect *timing* only
+    assert len(paths[True]) > 100
+
+
+# --------------------------------------------------------------------------
+# Planner.replan_degraded: deadline-credit + the shed valve
+# --------------------------------------------------------------------------
+def _degrade(planner, prof, n_done, time_left, util=0.0, queue=0.0):
+    return planner.replan_degraded(
+        PlanRequest(device=prof, utilization_hint=util,
+                    queue_delay_hint=queue),
+        n_done=n_done, time_left=time_left)
+
+
+def test_replan_degraded_matches_preempted_without_shed():
+    """Same elapsed-time-credit machinery: absent a shed policy the two
+    replan entry points solve the identical remaining split."""
+    planner = Planner(CALIBRATED, policy="variable+batching")
+    prof = DeviceProfile("d", r_dev=2.25, rtt=0.9,
+                         k_decode=CALIBRATED.k_decode)
+    for n_done, time_left in ((0, CALIBRATED.t_lim), (10, 6.0), (25, 4.0)):
+        deg = _degrade(planner, prof, n_done, time_left)
+        pre = planner.replan_preempted(PlanRequest(device=prof),
+                                       n_done=n_done, time_left=time_left)
+        assert (deg.n_final, deg.latency, deg.action) \
+            == (pre.n_final, pre.latency, pre.action)
+
+
+def _check_degrade_ceiling(r_dev, rtt, n_done, time_left):
+    """The §7 invariant carries over to mid-flight replans: a
+    degrade-to-local verdict promises local finish within
+    degrade_ceil x the REMAINING budget; a reject had no winnable plan."""
+    shed = ShedPolicy(queue_high=0.5, util_high=0.9, degrade_ceil=1.5)
+    planner = Planner(CALIBRATED, policy="variable+batching",
+                      shed_policy=shed)
+    prof = DeviceProfile("d", r_dev=r_dev, rtt=rtt,
+                         k_decode=CALIBRATED.k_decode)
+    d = _degrade(planner, prof, n_done, time_left, util=1.0, queue=30.0)
+    assert d.action in ("admit", "degrade-to-local", "reject")
+    if d.action == "degrade-to-local":
+        assert d.n_final == 0 and d.gpu_time == 0.0
+        assert d.latency <= shed.degrade_ceil * time_left + 1e-9
+
+
+@pytest.mark.parametrize("r_dev,time_left", [(8.0, 6.0), (30.0, 2.0),
+                                             (2.25, 6.0)])
+def test_degrade_ceiling_fixed(r_dev, time_left):
+    _check_degrade_ceiling(r_dev, 0.3, 10, time_left)
+
+
+@given(r_dev=st.floats(0.5, 60.0), rtt=st.floats(0.0, 2.0),
+       n_done=st.integers(0, 50), time_left=st.floats(0.5, 10.0))
+@settings(max_examples=60, deadline=None)
+def test_degrade_ceiling_property(r_dev, rtt, n_done, time_left):
+    _check_degrade_ceiling(r_dev, rtt, n_done, time_left)
+
+
+def test_replan_degraded_sheds_hopeless_link():
+    """A Table-4 device whose link degraded into hopelessness under
+    pressure is rejected (the simulator maps that to best-effort local),
+    where replan_preempted would have shipped an unwinnable split."""
+    planner = Planner(CALIBRATED, policy="variable+batching",
+                      shed_policy=ShedPolicy(queue_high=0.5,
+                                             util_high=0.9))
+    prof = DeviceProfile("d", r_dev=2.25, rtt=0.3,
+                         k_decode=CALIBRATED.k_decode)
+    d = _degrade(planner, prof, 10, 6.0, util=1.0, queue=30.0)
+    assert d.action == "reject"
+    pre = planner.replan_preempted(PlanRequest(device=prof),
+                                   n_done=10, time_left=6.0)
+    assert pre.action == "admit"        # preemption replans never shed
+
+
+# --------------------------------------------------------------------------
+# end-to-end: NET_SHIFT replans round-trip through the decision trace
+# --------------------------------------------------------------------------
+def _roundtrip(tmp_path, core):
+    path = str(tmp_path / f"mob_{core}.jsonl")
+    res = run_fleet_sim(SimConfig(core=core, mobility=MOBILE,
+                                  trace_out=path, **CHURN))
+    return res, read_trace(path)
+
+
+def test_net_shift_replans_round_trip_v1(tmp_path):
+    res, trace = _roundtrip(tmp_path, "v1")
+    assert res.net_shifts > 1000 and res.net_replans > 0
+    assert res.net_handoffs > 0 and res.net_disconnects > 0
+    shifts = trace.net_shifts()
+    assert len(shifts) == res.net_shifts
+    assert {s["shift"] for s in shifts} >= {"drift", "handoff",
+                                            "disconnect", "reconnect"}
+    replans = [r for r in trace.replans()
+               if r.get("source") == "net-shift"]
+    assert len(replans) == res.net_replans
+    assert all("utilization_hint" in r for r in replans)
+    report = verify_decisions(trace)
+    assert report.ok, report.to_json()
+    assert report.n_replans == res.net_replans
+    assert report.n_plans == res.n_arrivals
+    # mobility config rides in the header for audit trails
+    assert trace.header["sim"]["mobility"]["handoff_rate"] == 0.004
+
+
+def test_net_shift_conservation_v1(tmp_path):
+    """Every arrival is accounted for: served (possibly degraded to
+    pure-local) or shed at admission — mid-flight replans never lose a
+    request."""
+    res, _ = _roundtrip(tmp_path, "v1")
+    assert len(res.completed) + res.rejected == res.n_arrivals
+
+
+def test_v2_mobility_runs_and_verifies(tmp_path):
+    """The wheel core routes NET_SHIFT through the bucketed wheel and
+    its traces verify; the fast lane names mobility as a blocker."""
+    res, trace = _roundtrip(tmp_path, "v2")
+    assert res.fast_lane is False
+    assert "mobility" in res.fast_lane_blockers
+    assert res.net_replans > 0
+    report = verify_decisions(trace)
+    assert report.ok, report.to_json()
+    assert report.n_replans == res.net_replans
+
+
+def test_v2_fast_require_refuses_mobility():
+    with pytest.raises(ValueError, match="mobility"):
+        run_fleet_sim(SimConfig(core="v2", v2_fast="require",
+                                mobility=MOBILE, exact_stats=False,
+                                **GOLDEN))
+
+
+def test_v2_fast_lane_runs_without_mobility():
+    res = run_fleet_sim(SimConfig(core="v2", exact_stats=False, **GOLDEN))
+    assert res.fast_lane is True and res.fast_lane_blockers == []
+
+
+def test_v2_fast_off_is_loud():
+    res = run_fleet_sim(SimConfig(core="v2", exact_stats=False,
+                                  v2_fast="off", **GOLDEN))
+    assert res.fast_lane is False
+    assert res.fast_lane_blockers == ["v2_fast=off"]
+
+
+# --------------------------------------------------------------------------
+# replan beats freeze-at-arrival at equal provisioned cost (fixed seed)
+# --------------------------------------------------------------------------
+def test_replan_beats_freeze_fixed_seed():
+    """The bench cell's claim, spot-checked at one seed: on identical
+    weather and identical provisioned capacity, replanning degraded
+    sessions beats freezing the arrival-time split on BOTH p99 and
+    deadline violations.  The winning regime is outage-driven: a frozen
+    split ships into the outage and pays the remaining window; a replan
+    moves the remainder local (or re-splits on the live link) instead.
+    Handoff-heavy overload is the wrong regime — replanning loses queue
+    position there — which is exactly what the bench axis documents."""
+    arms = {}
+    for arm in (True, False):
+        arms[arm] = run_fleet_sim(SimConfig(
+            policy="variable+batching", rate=12.0, duration=120.0,
+            seed=3, gpus_init=10, max_gpus=32, metrics_interval_s=10.0,
+            mobility=MobilityConfig(
+                drift_interval_s=20.0, drift_sigma=0.2,
+                handoff_rate=0.0, disconnect_rate=0.02,
+                outage_mean_s=10.0, replan=arm)))
+    r, f = arms[True], arms[False]
+    assert r.net_shifts == f.net_shifts         # identical weather
+    assert r.net_replans > 0 and f.net_replans == 0
+    assert r.violations < f.violations
+    assert r.latency_percentile(99) < f.latency_percentile(99)
+
+
+# --------------------------------------------------------------------------
+# GpuPool.cancel: mid-flight withdraw accounting
+# --------------------------------------------------------------------------
+def test_cancel_running_job_refunds_and_drains():
+    pool = GpuPool(n_init=1, min_gpus=0, max_gpus=1)
+    a = _Job(group=1, members=[], service=5.0, submitted=0.0)
+    b = _Job(group=1, members=[], service=3.0, submitted=0.0)
+    assert pool.submit(0.0, a) == 5.0       # starts immediately
+    assert pool.submit(0.0, b) is None      # queued behind it
+    assert pool.gpu_seconds == pytest.approx(5.0)   # billed at start
+    started = pool.cancel(2.0, a)           # withdraw mid-flight at t=2
+    # elapsed stays billed (burned work), unused refunded, queue drains
+    assert a.killed
+    assert [(j, f) for j, f in started] == [(b, 5.0)]
+    assert pool.gpu_seconds == pytest.approx(2.0 + 3.0)
+    assert pool.busy == 1                   # b took the freed slot
+
+
+def test_cancel_queued_job_is_lazy_and_skipped_at_drain():
+    pool = GpuPool(n_init=1, min_gpus=0, max_gpus=1)
+    a = _Job(group=1, members=[], service=5.0, submitted=0.0)
+    b = _Job(group=1, members=[], service=3.0, submitted=0.0)
+    c = _Job(group=1, members=[], service=2.0, submitted=0.0)
+    pool.submit(0.0, a)
+    pool.submit(0.0, b)
+    pool.submit(0.0, c)
+    assert pool.queue_len() == 2
+    assert pool.cancel(1.0, b) == []        # queued: lazy kill, no drain
+    assert b.killed and pool.queue_len() == 1
+    started = pool.job_done(5.0, a)         # drain skips the dead entry
+    assert [(j, f) for j, f in started] == [(c, 7.0)]
+    assert pool.gpu_seconds == pytest.approx(5.0 + 2.0)  # b never billed
+    assert pool.queue_len() == 0 and pool.queued_service == 0.0
