@@ -231,6 +231,107 @@ def mobility_comparison(duration=MOBILITY["duration"], core="v1"):
     return out
 
 
+#: The wire-format demonstration cell (docs/transport.md): the Table-4
+#: fleet pushed into the slow-link regime (cellular-grade bandwidth,
+#: +50 ms rtt) under the mobility weather of the mobility cell, where
+#: the fp32 boundary ship is a first-order latency term.  Both arms get
+#: the SAME accuracy budget; they differ only in which wire formats the
+#: planner may spend it on — fp32-only vs int8-capable.  The
+#: int8-capable arm must win p99 AND cloud GPU-seconds.
+WIRE = dict(rate=12.0, duration=80.0, seed=3, gpus_init=10, max_gpus=32,
+            bandwidth=1.2e6, rtt_extra=0.05, error_budget=5e-3,
+            payload_bytes=262144.0,
+            drift_interval_s=20.0, drift_sigma=0.2,
+            handoff_rate=0.0, disconnect_rate=0.02, outage_mean_s=10.0)
+
+
+def _wire_fleet(seed):
+    """Table-4 fleet with every uplink degraded to the slow-link regime."""
+    import dataclasses
+    return [dataclasses.replace(p, bandwidth=WIRE["bandwidth"],
+                                rtt=p.rtt + WIRE["rtt_extra"])
+            for p in table4_fleet(seed=seed, params=CALIBRATED)]
+
+
+def wire_comparison(duration=WIRE["duration"], core="v1"):
+    """fp32-only vs int8-capable wire planning at EQUAL accuracy budget
+    on identical capacity, weather, and arrivals.  The fp32 arm pins
+    ``formats=("fp32",)`` — an *active but empty* wire stage, which the
+    planner contract guarantees is bit-identical to no wire stage at
+    all (the golden-anchor property tests/test_wire.py pins)."""
+    from repro.api import WirePolicy
+    out = {"config": {k: WIRE[k] for k in WIRE},
+           "core": core, "duration": duration}
+    arms = (("fp32", ("fp32",)),
+            ("int8", ("fp32", "fp16", "int8", "int8_zlib", "topk")))
+    for label, formats in arms:
+        wire = WirePolicy(formats=formats,
+                          payload_bytes=WIRE["payload_bytes"],
+                          error_budget=WIRE["error_budget"])
+        mob = MobilityConfig(
+            drift_interval_s=WIRE["drift_interval_s"],
+            drift_sigma=WIRE["drift_sigma"],
+            handoff_rate=WIRE["handoff_rate"],
+            disconnect_rate=WIRE["disconnect_rate"],
+            outage_mean_s=WIRE["outage_mean_s"])
+        res = run_fleet_sim(SimConfig(
+            policy="variable+batching", params=CALIBRATED,
+            rate=WIRE["rate"], duration=duration, seed=WIRE["seed"],
+            fleet=_wire_fleet(WIRE["seed"]),
+            gpus_init=WIRE["gpus_init"], max_gpus=WIRE["max_gpus"],
+            metrics_interval_s=10.0, core=core, mobility=mob,
+            wire=wire))
+        rec = _cell_record("variable+batching", WIRE["rate"], res)
+        del rec["per_class"]
+        out[label] = rec
+    # the acceptance metric: smaller boundary payloads must buy BOTH
+    # tail latency and cloud compute at equal accuracy budget
+    out["p99_improvement"] = (out["fp32"]["p99_latency"]
+                              - out["int8"]["p99_latency"])
+    out["gpu_seconds_saved"] = (out["fp32"]["total_gpu_seconds"]
+                                - out["int8"]["total_gpu_seconds"])
+    out["int8_beats_fp32"] = (
+        out["int8"]["p99_latency"] < out["fp32"]["p99_latency"]
+        and out["int8"]["total_gpu_seconds"]
+        < out["fp32"]["total_gpu_seconds"])
+    out["bytes"] = wire_bytes_cell()
+    return out
+
+
+def wire_bytes_cell(max_records=4):
+    """Engine-in-the-loop bytes reconciliation, one row per wire format:
+    the planner's closed-form ``transport.wire_nbytes`` against
+    ``len(payload)`` of what the real engine (Pallas int8 kernel and
+    all) actually shipped.  ``exact`` must be True for every
+    closed-form format; compressed formats are data-dependent, so only
+    the measured side reports."""
+    import tempfile
+
+    from repro.api import read_trace, replay_through_engine
+
+    path = os.path.join(tempfile.mkdtemp(), "wire_trace.jsonl")
+    run_fleet_sim(SimConfig(policy="variable+batching", rate=8.0,
+                            duration=15.0, seed=7, gpus_init=10,
+                            max_gpus=32, trace_out=path))
+    trace = read_trace(path)
+    rows = {}
+    for fmt in ("fp32", "fp16", "int8", "topk", "int8_zlib"):
+        rep = replay_through_engine(trace, max_records=max_records,
+                                    wire=fmt)
+        closed_form = all(g.modeled_bytes > 0 for g in rep.groups)
+        rows[fmt] = {
+            "modeled_bytes": [g.modeled_bytes for g in rep.groups],
+            "measured_bytes": [g.measured_bytes for g in rep.groups],
+            "exact": (all(g.modeled_bytes == g.measured_bytes
+                          for g in rep.groups)
+                      if closed_form else None),
+        }
+    rows["all_closed_form_exact"] = all(
+        r["exact"] for r in rows.values()
+        if isinstance(r, dict) and r["exact"] is not None)
+    return rows
+
+
 def sample_decision(seed=0):
     """One audited PlanDecision on the Table-4 reference device — the
     unified-planner protocol record (JSON-replayable; drift in the
@@ -343,6 +444,22 @@ def _merge_write(out_path, update):
         json.dump(existing, f, indent=1)
 
 
+def _print_wire(w):
+    f, i = w["fp32"], w["int8"]
+    by = w["bytes"]
+    print(f"wire core={w['core']} (equal accuracy budget "
+          f"{w['config']['error_budget']:g}): "
+          f"p99 fp32={f['p99_latency']:.2f}s int8={i['p99_latency']:.2f}s; "
+          f"gpu_s fp32={f['total_gpu_seconds']:.1f} "
+          f"int8={i['total_gpu_seconds']:.1f}; "
+          f"viol fp32={f['violations']} int8={i['violations']} "
+          f"int8_beats_fp32={w['int8_beats_fp32']}")
+    print(f"wire bytes (modeled==measured per closed-form format): "
+          f"all_exact={by['all_closed_form_exact']} "
+          + " ".join(f"{k}={v['measured_bytes'][0]}B"
+                     for k, v in by.items() if isinstance(v, dict)))
+
+
 def _print_mobility(mob):
     r, f = mob["replan"], mob["freeze"]
     print(f"mobility core={mob['core']} (identical weather: "
@@ -362,9 +479,22 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mobility", action="store_true",
                     help="run ONLY the mobility replan-vs-freeze cell")
+    ap.add_argument("--wire", action="store_true",
+                    help="run ONLY the wire-format fp32-vs-int8 cell "
+                         "+ engine bytes reconciliation")
     ap.add_argument("--core", choices=("v1", "v2"), default="v1",
-                    help="simulation core for the mobility cell")
+                    help="simulation core for the mobility/wire cell")
     args = ap.parse_args()
+
+    if args.wire:
+        w = wire_comparison(
+            duration=SMOKE_DURATION if args.smoke else WIRE["duration"],
+            core=args.core)
+        key = "wire" if args.core == "v1" else f"wire_{args.core}"
+        _merge_write(args.out, {key: w})
+        print(f"wrote wire cell '{key}' to {args.out}")
+        _print_wire(w)
+        return
 
     if args.mobility:
         mob = mobility_comparison(

@@ -64,6 +64,11 @@ from repro.serving.fleet_sim import (  # noqa: F401
     SimConfig,
     run_fleet_sim,
 )
+from repro.core.transport import (  # noqa: F401
+    WIRE_FORMATS,
+    WireFormat,
+    WirePolicy,
+)
 from repro.serving.mobility import (  # noqa: F401
     MobilityConfig,
 )
@@ -101,6 +106,8 @@ __all__ = [
     "DeviceProfile", "generate_fleet", "FleetSimResult", "SimConfig",
     "MobilityConfig", "run_fleet_sim", "CALIBRATED", "fleet_sim_table4",
     "run_table4", "table4_capacity", "table4_fleet",
+    # boundary wire formats (docs/transport.md)
+    "WIRE_FORMATS", "WireFormat", "WirePolicy",
     # engine-in-the-loop trace replay (docs/engine_replay.md; the
     # engine-executing half lazily imports jax inside the call)
     "Trace", "read_trace", "verify_decisions", "replay_through_engine",

@@ -51,28 +51,35 @@ class CostParams:
 
 def e2e_latency(n_cloud: float, r_dev: float, p: CostParams,
                 t_network: float, c_batch: Optional[float] = None,
-                r_cloud: Optional[float] = None) -> float:
+                r_cloud: Optional[float] = None,
+                t_wire: float = 0.0) -> float:
     """T(n_cloud) for a device with rate r_dev and measured RTT.
 
     ``r_cloud`` overrides the reference rate with a specific GPU class's
-    rate (class-aware dispatch).
+    rate (class-aware dispatch).  ``t_wire`` is the wire-format
+    transfer-time delta versus dense fp32 (``WireFormat.t_wire``:
+    negative when byte savings beat the codec charge; 0.0 — the
+    bit-identical default — when the wire stage is off or pinned fp32).
     """
     cb = p.c_batch if c_batch is None else c_batch
     rc = p.r_cloud if r_cloud is None else r_cloud
     return (n_cloud * cb / rc
             + (p.n_total - n_cloud) / r_dev
-            + t_network
+            + (t_network + t_wire if t_wire != 0.0 else t_network)
             + p.k_decode / r_dev)
 
 
 def solve_n_cloud(r_dev: float, p: CostParams, t_network: float,
                   c_batch: Optional[float] = None,
-                  r_cloud: Optional[float] = None) -> float:
+                  r_cloud: Optional[float] = None,
+                  t_wire: float = 0.0) -> float:
     """Minimum (real-valued) n_cloud with T(n_cloud) <= t_lim.
 
     Returns 0.0 when the device alone meets the SLA, and n_total when even
     all-cloud cannot meet it (best effort; caller may flag infeasible).
     ``r_cloud`` overrides the reference rate (class-aware variant).
+    ``t_wire`` folds a wire-format transfer delta into the network term
+    (0.0 default is bit-identical to the pre-wire model).
 
     The closed form itself lives in ``solve_n_cloud_batch`` (single source
     of truth); this scalar wrapper exists for hot single-device call sites
@@ -80,6 +87,8 @@ def solve_n_cloud(r_dev: float, p: CostParams, t_network: float,
     """
     cb = p.c_batch if c_batch is None else c_batch
     rc = p.r_cloud if r_cloud is None else r_cloud
+    if t_wire != 0.0:
+        t_network = t_network + t_wire
     # Scalar transcription of the batch kernel's branch structure.  Every
     # arithmetic expression below appears verbatim in solve_n_cloud_batch,
     # and a hypothesis property test pins exact (bitwise) equality of the
@@ -98,7 +107,8 @@ def solve_n_cloud(r_dev: float, p: CostParams, t_network: float,
 
 def solve_n_cloud_batch(r_dev, t_network, p: CostParams,
                         c_batch=None, r_cloud=None,
-                        t_lim=None, k_decode=None, n_total=None):
+                        t_lim=None, k_decode=None, n_total=None,
+                        t_wire=0.0):
     """Vectorized ``solve_n_cloud``: one numpy pass over whole cohorts.
 
     ``r_dev`` and ``t_network`` are arrays (or broadcastable scalars);
@@ -123,6 +133,8 @@ def solve_n_cloud_batch(r_dev, t_network, p: CostParams,
     nt = np.asarray(p.n_total if n_total is None else n_total, np.float64)
     rd = np.asarray(r_dev, np.float64)
     tn = np.asarray(t_network, np.float64)
+    if np.any(np.asarray(t_wire) != 0.0):
+        tn = tn + t_wire
     denom = cb / rc - 1.0 / rd
     rhs = tl - tn - (nt + kd) / rd
     with np.errstate(divide="ignore", invalid="ignore"):
@@ -132,16 +144,19 @@ def solve_n_cloud_batch(r_dev, t_network, p: CostParams,
 
 
 def e2e_latency_batch(n_cloud, r_dev, p: CostParams, t_network,
-                      c_batch=None, r_cloud=None):
+                      c_batch=None, r_cloud=None, t_wire=0.0):
     """Vectorized ``e2e_latency`` (same operation order, bit-identical
-    per lane)."""
+    per lane).  ``t_wire`` may be a scalar or a per-lane array; the 0.0
+    default leaves every lane bit-identical to the pre-wire model."""
     cb = p.c_batch if c_batch is None else c_batch
     rc = p.r_cloud if r_cloud is None else r_cloud
     n_cloud = np.asarray(n_cloud, np.float64)
     r_dev = np.asarray(r_dev, np.float64)
+    tn = (t_network + t_wire if np.any(np.asarray(t_wire) != 0.0)
+          else t_network)
     return (n_cloud * cb / rc
             + (p.n_total - n_cloud) / r_dev
-            + t_network
+            + tn
             + p.k_decode / r_dev)
 
 
@@ -304,18 +319,28 @@ def c_batch_at(c_batch_2: float, batch_size: int) -> float:
 # --------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class SegmentCost:
-    """Costs of one candidate split point at layer-group granularity."""
+    """Costs of one candidate split point at layer-group granularity.
+
+    ``wire_format``/``wire_bytes``/``wire_codec_s`` describe the payload
+    after wire encoding (docs/transport.md): when ``wire_bytes`` is set
+    it replaces ``payload_bytes`` on the link and the codec charge is
+    added; the defaults leave the pre-wire model untouched.
+    """
     split_index: int          # run groups [0, split_index) on the cloud
     cloud_flops: float        # FLOPs of groups [0, split_index)
     device_flops: float       # FLOPs of groups [split_index, G] + head
     payload_bytes: int        # boundary activation (+ state) to transfer
+    wire_format: str = "fp32"
+    wire_bytes: Optional[float] = None   # encoded size on the wire
+    wire_codec_s: float = 0.0            # quantize/dequantize charge
 
 
 def segment_latency(seg: SegmentCost, cloud_flops_s: float,
                     dev_flops_s: float, rtt: float, bandwidth: float) -> float:
+    nbytes = seg.payload_bytes if seg.wire_bytes is None else seg.wire_bytes
     return (seg.cloud_flops / cloud_flops_s
             + seg.device_flops / dev_flops_s
-            + rtt + seg.payload_bytes / bandwidth)
+            + rtt + nbytes / bandwidth + seg.wire_codec_s)
 
 
 def solve_split_fraction(segments, cloud_flops_s: float, dev_flops_s: float,

@@ -58,6 +58,7 @@ from repro.core.scheduler import (
     cheapest_feasible_class,
 )
 from repro.core.telemetry import DeviceProfile
+from repro.core.transport import WIRE_FORMATS, WireFormat, WirePolicy
 
 #: The four Table-4 policies, in paper order (canonical definition;
 #: ``serving.simulator.POLICIES`` re-exports it).
@@ -128,6 +129,10 @@ class JobSpec:
     #: given, ``fit_batch_model`` calibrates the batching slope instead
     #: of the single pinned ``c_batch_at`` extrapolation
     batch_timings: Optional[Tuple[Tuple[int, float], ...]] = None
+    #: accuracy budget the wire stage may spend on boundary quantization
+    #: (``WireFormat.error`` units; docs/transport.md).  0.0 — the
+    #: default — pins the wire format to fp32 (bit-identical planning).
+    error_budget: float = 0.0
 
     def cost_params(self, r_cloud: float) -> CostParams:
         return CostParams(r_cloud=r_cloud, n_total=self.n_total,
@@ -205,7 +210,7 @@ class PlanRequest:
 #: cached/uncached paths, which is what makes field-exact replay
 #: verification possible.
 TRACE_FIELDS = ("n_exact", "n_final", "latency", "feasible", "gpu_time",
-                "batch_admit", "batch_max_wait", "t_lim", "action")
+                "batch_admit", "batch_max_wait", "t_lim", "action", "wire")
 
 
 @dataclasses.dataclass
@@ -236,6 +241,10 @@ class PlanDecision:
     #: winnable plan — not even pure-local meets the deadline)
     action: str = "admit"
     shed_reason: str = ""
+    #: boundary wire format the payload ships in (docs/transport.md);
+    #: "fp32" — dense, no codec — unless a wire stage with a positive
+    #: error budget picked a cheaper encoding for this link
+    wire: str = "fp32"
 
     #: the live Assignment the scheduler produced (not serialized; the
     #: fleet simulator keeps it so the migration is object-identical)
@@ -445,15 +454,17 @@ class _PlanEntry:
     """
 
     __slots__ = ("epoch", "asg", "gpu_time", "has_admission", "solo",
-                 "batched", "local_lat", "deny_slack", "deny_decision",
-                 "last_qhint", "last_uhint", "last_device_id",
-                 "last_decision")
+                 "batched", "local_lat", "deny_slack", "wire",
+                 "deny_decision", "last_qhint", "last_uhint",
+                 "last_device_id", "last_decision")
 
     def __init__(self, epoch: int, asg: Assignment, gpu_time: float,
                  has_admission: bool, solo: float, batched: float,
-                 local_lat: float, deny_slack: float):
+                 local_lat: float, deny_slack: float,
+                 wire: str = "fp32"):
         self.epoch = epoch
         self.asg = asg
+        self.wire = wire
         self.gpu_time = gpu_time
         self.has_admission = has_admission
         self.solo = solo
@@ -590,7 +601,8 @@ class Planner:
                  audit: bool = True,
                  sla_source: str = "fixed",
                  shed_policy: Optional[ShedPolicy] = None,
-                 cache: object = True):
+                 cache: object = True,
+                 wire: Optional[WirePolicy] = None):
         if params is None:
             if job is None:
                 raise ValueError("need params or a JobSpec")
@@ -636,6 +648,22 @@ class Planner:
             RoutePolicy(capacity, params,
                         deadline_aware=dispatch == "edf")
             if capacity is not None else None)
+        # wire stage (docs/transport.md): resolve the error budget NOW
+        # (WirePolicy.error_budget=None defers to JobSpec.error_budget)
+        # so config_json() serializes a concrete budget and from_config
+        # rebuilds the exact same candidate set.  An empty candidate set
+        # — wire=None, or a budget no non-fp32 format fits under — makes
+        # the whole stage a no-op and planning bit-identical to the
+        # pre-wire pipeline.
+        if isinstance(wire, dict):
+            wire = WirePolicy.from_json(wire)
+        if wire is not None and wire.error_budget is None:
+            wire = dataclasses.replace(wire, error_budget=job.error_budget)
+        self.wire = wire
+        self._wire_candidates: Tuple[WireFormat, ...] = tuple(
+            WIRE_FORMATS[n] for n in wire.formats
+            if n != "fp32" and WIRE_FORMATS[n].error <= wire.error_budget
+        ) if wire is not None else ()
         # plan() embeds the config in every decision; it only changes
         # on set_t_lim, so cache the dict (treated as read-only by
         # decisions; to_json() deep-copies it for the wire)
@@ -678,7 +706,9 @@ class Planner:
             solve_c_batch=d.get("solve_c_batch", 1.0),
             sla_source=d.get("sla_source", "fixed"),
             shed_policy=ShedPolicy(**d["shed_policy"])
-            if d.get("shed_policy") else None)
+            if d.get("shed_policy") else None,
+            wire=WirePolicy.from_json(d["wire"])
+            if d.get("wire") else None)
 
     def config_json(self) -> Dict[str, Any]:
         """Everything needed to rebuild this planner deterministically
@@ -700,6 +730,7 @@ class Planner:
             "sla_source": self._sla_source,
             "shed_policy": dataclasses.asdict(self.shed_policy)
             if self.shed_policy else None,
+            "wire": self.wire.to_json() if self.wire else None,
         }
         return self._config_cache
 
@@ -825,18 +856,57 @@ class Planner:
         entry.last_decision = decision
         return decision
 
+    def _wire_select(self, prof: DeviceProfile):
+        """Stage 2.5 — wire-format selection (docs/transport.md).
+
+        Solves the split once per candidate format with the format's
+        transfer-time delta (``WireFormat.t_wire``: bytes saved at the
+        link bandwidth minus the codec charge) folded into the network
+        term, then keeps the best by ``(feasible, n_final, latency,
+        error)`` — feasibility first, then FEWEST cloud iterations (the
+        paper's minimize-cloud-compute objective: a cheaper wire means
+        the device can keep more steps inside the same SLA), latency,
+        and only then accuracy spent.  fp32 wins every tie, so an empty
+        candidate set or no strict improvement leaves the pre-wire plan
+        bit-identical.
+
+        Returns ``(assignment, wire_name, effective_profile)`` — the
+        effective profile carries the wire-adjusted rtt so downstream
+        stages (batching admission) price the same link the solve did.
+        A candidate whose solve lands at ``n_final <= 0`` is discarded:
+        with no cloud leg there is no boundary transfer, so its modeled
+        discount is fictitious.
+        """
+        base = self.scheduler.assign_one(prof)
+        if not self._wire_candidates or base.n_final <= 0:
+            return base, "fp32", prof
+        best_key = (not base.feasible, base.n_final, base.latency, 0.0)
+        best = (base, "fp32", prof)
+        payload = self.wire.payload_bytes
+        for fmt in self._wire_candidates:
+            tw = fmt.t_wire(payload, prof.bandwidth)
+            prof_f = dataclasses.replace(prof, rtt=prof.rtt + tw)
+            af = self.scheduler.assign_one(prof_f)
+            if af.n_final <= 0:
+                continue
+            key = (not af.feasible, af.n_final, af.latency, fmt.error)
+            if key < best_key:
+                best_key = key
+                best = (af, fmt.name, prof_f)
+        return best
+
     def _solve_profile(self, prof: DeviceProfile) -> _PlanEntry:
         """Stages whose outputs depend only on the device profile and
-        the planner config: split solve + quantization, solo GPU time,
-        the §4.4 admission latencies, and the pure-local latency the
-        shedding stage compares against."""
+        the planner config: split solve + quantization, wire-format
+        selection, solo GPU time, the §4.4 admission latencies, and the
+        pure-local latency the shedding stage compares against."""
         p = self.p
-        a = self.scheduler.assign_one(prof)
+        a, wire, eff_prof = self._wire_select(prof)
         gpu_time = cloud_gpu_time(a.n_final, p) if a.n_final > 0 else 0.0
         has_admission = self.admission is not None and a.n_final > 0
         if has_admission:
             solo, batched = self.admission.latencies(a.n_final, prof.r_dev,
-                                                     prof.rtt)
+                                                     eff_prof.rtt)
             deny_slack = ((p.t_lim - batched) if self.admission.saves_time
                           else -math.inf)
         else:
@@ -845,7 +915,7 @@ class Planner:
         local_lat = (e2e_latency(0, prof.r_dev, p, prof.rtt, c_batch=1.0)
                      if self.shed_policy is not None else 0.0)
         return _PlanEntry(self.config_epoch, a, gpu_time, has_admission,
-                          solo, batched, local_lat, deny_slack)
+                          solo, batched, local_lat, deny_slack, wire)
 
     # -- cohort path: one vectorized solve for many profiles ----------------
     def plan_cohort(self, profiles, queue_delay_hint: float = 0.0,
@@ -912,6 +982,12 @@ class Planner:
         sched = self.scheduler
         cls = type(sched)
         p = self.p
+        if self._wire_candidates:
+            # wire selection re-solves per candidate format with a
+            # format- and bandwidth-dependent rtt shift — no closed
+            # vector form yet, so wire-active configs take the scalar
+            # path (one entry per profile, values identical)
+            return [self._solve_profile(pr) for pr in profiles]
         k = len(profiles)
         r_dev = np.fromiter((pr.r_dev for pr in profiles), np.float64, k)
         rtt = np.fromiter((pr.rtt for pr in profiles), np.float64, k)
@@ -997,6 +1073,7 @@ class Planner:
                       else "local-only request; nothing to batch")
 
         action, shed_reason = "admit", ""
+        wire = entry.wire
         gpu_class: Optional[str] = None
         cloud_rate = p.r_cloud
         if self.shed_policy is not None and a.n_final > 0 \
@@ -1020,10 +1097,12 @@ class Planner:
                 a = dataclasses.replace(
                     a, n_final=0, latency=local_lat,
                     feasible=local_lat <= p.t_lim + 1e-9,
-                    batched=False, batch_factor=1.0)
+                    batched=False, batch_factor=1.0,
+                    t_network=prof.rtt)
                 gpu_time = 0.0
                 admit, max_wait = False, 0.0
                 reason = "shed: degraded to local; nothing to batch"
+                wire = "fp32"            # nothing ships; no codec to run
             else:
                 action = "reject"
                 shed_reason = (f"pressure ({hint}) and no winnable plan: "
@@ -1039,7 +1118,7 @@ class Planner:
             batch_max_wait=max_wait, batch_latency=batch_lat,
             batch_solo_latency=solo_lat, batch_reason=reason,
             t_lim=p.t_lim, trace=[], action=action,
-            shed_reason=shed_reason, _assignment=a)
+            shed_reason=shed_reason, wire=wire, _assignment=a)
 
     def _plan_audited(self, request: PlanRequest) -> PlanDecision:
         """The fully traced pipeline (audit=True)."""
@@ -1049,8 +1128,12 @@ class Planner:
         audit = True
         trace: List[Dict[str, Any]] = []
 
-        # 1+2. split solve + quantize (the Table-4 per-request policy)
-        a = self.scheduler.assign_one(prof)
+        # 1+2. split solve + quantize (the Table-4 per-request policy),
+        # with the wire-format stage (2.5) folded into the solve: each
+        # candidate encoding shifts the network term and the best
+        # (feasibility, n_final, latency, error) plan wins — fp32 on
+        # ties, so a budget of 0 reproduces the pre-wire pipeline.
+        a, wire, eff_prof = self._wire_select(prof)
         if audit:
             trace.append(_t("n_exact", a.n_exact,
                             f"split:{self.scheduler.name}",
@@ -1065,6 +1148,19 @@ class Planner:
                             f"r_cloud={p.r_cloud:.4g}"))
             trace.append(_t("feasible", a.feasible, "model:e2e_latency",
                             f"latency <= t_lim={p.t_lim:.4g}"))
+            if self._wire_candidates:
+                fmt = WIRE_FORMATS[wire]
+                trace.append(_t(
+                    "wire", wire, "wire:error-budget",
+                    f"{len(self._wire_candidates)} candidate(s) within "
+                    f"budget {self.wire.error_budget:.4g}; picked "
+                    f"error={fmt.error:.4g}, t_wire="
+                    f"{fmt.t_wire(self.wire.payload_bytes, prof.bandwidth):.4g}s "
+                    f"at bw={prof.bandwidth:.4g} B/s"))
+            else:
+                trace.append(_t("wire", wire, "wire:off",
+                                "no wire policy or zero error budget: "
+                                "boundary ships dense fp32"))
 
         # 3. class routing (advisory: queue-blind cheapest feasible —
         # skipped in non-audit mode, where routing happens at dispatch)
@@ -1093,7 +1189,7 @@ class Planner:
         # has nothing to batch — only the audit trace wants the verdict)
         if self.admission is not None and (a.n_final > 0 or audit):
             dec = self.admission.decide(
-                a.n_final, prof.r_dev, prof.rtt,
+                a.n_final, prof.r_dev, eff_prof.rtt,
                 queue_delay_hint=request.queue_delay_hint)
             admit, max_wait = dec.admit, dec.max_wait
             batch_lat, solo_lat = dec.batched_latency, dec.solo_latency
@@ -1138,10 +1234,12 @@ class Planner:
                 a = dataclasses.replace(
                     a, n_final=0, latency=local_lat,
                     feasible=local_lat <= p.t_lim + 1e-9,
-                    batched=False, batch_factor=1.0)
+                    batched=False, batch_factor=1.0,
+                    t_network=prof.rtt)
                 gpu_time, gpu_class, cloud_rate = 0.0, None, p.r_cloud
                 admit, max_wait = False, 0.0
                 reason = "shed: degraded to local; nothing to batch"
+                wire = "fp32"            # nothing ships; no codec to run
             else:
                 action = "reject"
                 shed_reason = (f"pressure ({hint}) and no winnable plan: "
@@ -1168,7 +1266,7 @@ class Planner:
             batch_max_wait=max_wait, batch_latency=batch_lat,
             batch_solo_latency=solo_lat, batch_reason=reason,
             t_lim=p.t_lim, trace=trace, action=action,
-            shed_reason=shed_reason, _assignment=a)
+            shed_reason=shed_reason, wire=wire, _assignment=a)
 
     # -- replan-on-preemption ------------------------------------------------
     def replan_preempted(self, request: PlanRequest, n_done: int,
@@ -1231,7 +1329,7 @@ class Planner:
             worst_r_dev=self.worst_r_dev, worst_rtt=self.worst_rtt,
             dispatch=self.dispatch, solve_c_batch=self.solve_c_batch,
             audit=self.audit, sla_source=sla_source,
-            shed_policy=shed_policy,
+            shed_policy=shed_policy, wire=self.wire,
             cache=False)      # one-shot planner: nothing to re-hit
         return replanner.plan(request)
 

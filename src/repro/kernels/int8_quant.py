@@ -28,24 +28,35 @@ def _kernel(x_ref, q_ref, s_ref):
 
 
 def int8_quantize(x, *, br: int = 256, interpret: bool = False):
-    """x (T, d) -> (q (T, d) int8, scales (T, 1) f32)."""
+    """x (T, d) -> (q (T, d) int8, scales (T, 1) f32).
+
+    Ragged row counts are handled by zero-padding T up to a multiple of
+    ``br`` and trimming the outputs: scales are per-row, so pad rows
+    quantize independently (s clamps to 1e-12, q == 0) and never
+    contaminate the real rows.
+    """
     T, d = x.shape
     br = min(br, T)
-    assert T % br == 0
-    return pl.pallas_call(
+    Tp = -(-T // br) * br
+    if Tp != T:
+        x = jnp.pad(x, ((0, Tp - T), (0, 0)))
+    q, s = pl.pallas_call(
         _kernel,
-        grid=(T // br,),
+        grid=(Tp // br,),
         in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
         out_specs=[
             pl.BlockSpec((br, d), lambda i: (i, 0)),
             pl.BlockSpec((br, 1), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((T, d), jnp.int8),
-            jax.ShapeDtypeStruct((T, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Tp, d), jnp.int8),
+            jax.ShapeDtypeStruct((Tp, 1), jnp.float32),
         ],
         interpret=interpret,
     )(x)
+    if Tp != T:
+        q, s = q[:T], s[:T]
+    return q, s
 
 
 def int8_dequantize(q, scales):

@@ -31,6 +31,7 @@ from repro.core.transport import (
     LinkProfile,
     WAN_LINK,
     pack_boundary,
+    pack_boundary_wire,
     transmission_time,
     unpack_boundary,
 )
@@ -48,6 +49,18 @@ from repro.models.moe import LOCAL_CTX
 ENGINE_STATS_KEYS = ("gpu_seconds", "compile_seconds", "bytes_shipped",
                      "requests", "executables", "cache_hits",
                      "cache_misses")
+
+
+def pallas_rowwise_int8(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-row symmetric int8 through the real ``kernels/int8_quant``
+    Pallas kernel (interpret-mode on CPU; same values as the numpy
+    reference ``transport.rowwise_quantize_int8`` — kernel-pinned in
+    tests/test_kernels.py).  This is the ``rowwise`` hook
+    ``pack_boundary_wire`` accepts, so engine payloads are quantized by
+    the accelerator kernel rather than numpy."""
+    from repro.kernels import ops
+    q, s = ops.int8_quantize(jnp.asarray(x, jnp.float32))
+    return np.asarray(q), np.asarray(s)
 
 
 def _new_stats() -> Dict[str, Any]:
@@ -76,12 +89,18 @@ class SplitResult:
 class DiffusionSplitEngine:
     def __init__(self, params, cfg, cost: CostParams,
                  link: LinkProfile = WAN_LINK, transfer_mode: str = "paper",
-                 planner: Optional[Planner] = None):
+                 planner: Optional[Planner] = None,
+                 wire: Optional[str] = None):
         self.params = params
         self.cfg = cfg
         self.cost = cost
         self.link = link
         self.transfer_mode = transfer_mode
+        #: wire-format name (core.transport.WIRE_FORMATS): when set it
+        #: overrides ``transfer_mode`` and payloads ship through
+        #: ``pack_boundary_wire`` with the Pallas int8 kernel as the
+        #: row-wise quantizer; None keeps the legacy pack_boundary modes
+        self.wire = wire
         # the shared decision-maker: assign() delegates here, so the
         # engine runs the exact per-request policy the simulators and
         # the fleet planner use (pass a shared Planner to keep one
@@ -159,9 +178,13 @@ class DiffusionSplitEngine:
         ctx_np = np.asarray(ctx2, np.float32)
         for i, r in enumerate(requests):
             need_ctx = n_cloud < cfg.n_total_iterations
-            payload = pack_boundary(
-                lat_np[i], ctx_np[:, i] if need_ctx else None,
-                mode=self.transfer_mode)
+            ctx_i = ctx_np[:, i] if need_ctx else None
+            if self.wire is not None:
+                payload = pack_boundary_wire(lat_np[i], ctx_i, self.wire,
+                                             rowwise=pallas_rowwise_int8)
+            else:
+                payload = pack_boundary(lat_np[i], ctx_i,
+                                        mode=self.transfer_mode)
             t_net = transmission_time(len(payload), self.link)
             results.append(SplitResult(
                 request_id=r.request_id, n_cloud=n_cloud, payload=payload,

@@ -113,6 +113,7 @@ from repro.core.telemetry import (
     poisson_arrival_blocks,
     poisson_arrivals,
 )
+from repro.core.transport import WirePolicy
 from repro.serving.event_wheel import EventWheel
 from repro.serving.mobility import MobilityConfig, MobilityModel
 from repro.serving.simulator import CALIBRATED, table4_fleet
@@ -206,6 +207,15 @@ class SimConfig:
     #: freeze-at-arrival baseline.  None (default) is bit-identical to
     #: the pre-mobility simulator (the golden-trace anchor).
     mobility: Optional["MobilityConfig"] = None
+    #: boundary wire-format planning (core.transport.WirePolicy,
+    #: docs/transport.md): when set, the planner's wire stage may trade
+    #: accuracy budget for bytes on the cloud->device ship, and the
+    #: SHIP time in the event dynamics carries the selected format's
+    #: transfer delta (``Assignment.t_network`` = rtt + t_wire).  None
+    #: (default) — and a WirePolicy whose resolved error budget admits
+    #: no non-fp32 format — are bit-identical to the pre-wire simulator
+    #: (the golden-trace anchor).
+    wire: Optional["WirePolicy"] = None
     # telemetry
     metrics_interval_s: float = 5.0
     #: keep every CompletedRequest (the golden-trace default; run-level
@@ -968,6 +978,7 @@ class FleetSimulator:
             shed_policy=ShedPolicy(queue_high=cfg.shed_queue_high,
                                    util_high=cfg.shed_util_high)
             if cfg.shedding else None,
+            wire=cfg.wire,
             # plan memoization (core.planner.PlanCache): bit-identical
             # decisions, O(1) for repeat device profiles
             cache=cfg.plan_cache)
@@ -1284,7 +1295,10 @@ class FleetSimulator:
                 continue
             prof = m.profile
             r_dev = prof.r_dev
-            tail = (prof.rtt
+            # m.assignment.t_network == prof.rtt + the wire format's
+            # transfer delta (identical to prof.rtt with the wire stage
+            # off), so the deadline prices the ship the plan chose
+            tail = (m.assignment.t_network
                     + (n_total - m.assignment.n_final - m.n_credit)
                     / r_dev
                     + k_decode / r_dev)
@@ -1363,6 +1377,13 @@ class FleetSimulator:
                 # pays for not replanning
                 rtt = mob.ship_rtt(prof.device_id, t, prof.rtt)
                 m.where = None
+            # the selected wire format's transfer delta rides the ship
+            # (Assignment.t_network = planned rtt + t_wire; exactly 0.0
+            # apart with the wire stage off, keeping the pre-wire event
+            # dynamics bit-identical)
+            wire_dt = m.assignment.t_network - prof.rtt
+            if wire_dt != 0.0:
+                rtt += wire_dt
             done = (t + rtt
                     + (n_total - m.assignment.n_final - m.n_credit)
                     / r_dev
@@ -1933,6 +1954,10 @@ class FleetSimulatorV2(FleetSimulator):
                 # live link at ship time (see the v1 handler)
                 rtt = mob.ship_rtt(prof.device_id, t, prof.rtt)
                 m.where = None
+            # wire-format ship delta (see the v1 handler)
+            wire_dt = m.assignment.t_network - prof.rtt
+            if wire_dt != 0.0:
+                rtt += wire_dt
             done = (t + rtt
                     + (n_total - m.assignment.n_final - m.n_credit)
                     / r_dev
@@ -1988,6 +2013,12 @@ class FleetSimulatorV2(FleetSimulator):
             blockers.append(f"sampling={cfg.sampling}")
         if self._mobility is not None:
             blockers.append("mobility")
+        if self.planner._wire_candidates:
+            # the fast lane inlines the device tail with the raw profile
+            # rtt; active wire selection shifts the ship time per format,
+            # so it takes the wheel (plan_cohort's scalar fallback keeps
+            # decisions identical to v1)
+            blockers.append("wire")
         if cfg.v2_bucket_s is not None:
             # explicit bucket sizing asks for the wheel; the fast lane
             # has no wheel and would silently ignore it

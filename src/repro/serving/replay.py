@@ -422,7 +422,8 @@ def reconcile(groups: List[GroupStats],
 def replay_through_engine(trace: Trace, engine=None, eng_cfg=None,
                           max_records: Optional[int] = None,
                           tolerance: float = 0.75,
-                          seed: int = 0) -> EngineReplayReport:
+                          seed: int = 0,
+                          wire: Optional[str] = None) -> EngineReplayReport:
     """Execute the trace's dispatch records through a real
     ``DiffusionSplitEngine`` executable cache and reconcile measured
     compile/cache/GPU-seconds/bytes against the modeled numbers.
@@ -432,7 +433,9 @@ def replay_through_engine(trace: Trace, engine=None, eng_cfg=None,
     calls (that *changes* the measured hit rate — it measures the warm
     cache, not this trace).  ``max_records`` caps how many dispatch
     records execute (the report counts what was skipped; nothing is
-    silently dropped).
+    silently dropped).  ``wire`` names a boundary wire format
+    (``transport.WIRE_FORMATS``) for the built engine; a passed-in
+    ``engine`` keeps whatever ``engine.wire`` it was constructed with.
     """
     # jax + model imports live here so the module itself stays light
     # (the fleet simulator imports TraceWriter from this module)
@@ -454,13 +457,32 @@ def replay_through_engine(trace: Trace, engine=None, eng_cfg=None,
                           n_step=eng_cfg.split_stride, t_lim=5.0,
                           k_decode=1.0)
         engine = DiffusionSplitEngine(params, eng_cfg, cost,
-                                      link=LOCAL_LINK)
+                                      link=LOCAL_LINK, wire=wire)
     cfg = engine.cfg
     sim_n_total = int(trace.header["planner"]["params"]["n_total"])
     eng_n_total = cfg.n_total_iterations
     eng_n_step = cfg.split_stride
 
     payload_table = dict(diffusion.split_payload(cfg, batch=1))
+    # wire-format engines (engine.wire set): modeled bytes are the
+    # EXACT closed-form encoded size (transport.wire_nbytes — manifest
+    # included), so modeled == measured for every non-compressed format.
+    # Compressed formats have data-dependent sizes: modeled stays 0 and
+    # only the measured side reports (docs/transport.md).
+    eng_wire = getattr(engine, "wire", None)
+
+    def modeled_payload_bytes(n_scaled: int) -> int:
+        if eng_wire is None:
+            return payload_table.get(f"denoising{n_scaled}", 0)
+        from repro.core.transport import wire_nbytes
+        shapes = {"latent": (cfg.latent_channels, cfg.latent_size,
+                             cfg.latent_size)}
+        if n_scaled < cfg.n_total_iterations:
+            shapes["context"] = (2, cfg.text_len, cfg.text_width)
+        try:
+            return wire_nbytes(shapes, eng_wire)
+        except ValueError:            # data-dependent (compressed) size
+            return 0
     dispatches = trace.dispatches()
     cap = len(dispatches) if max_records is None else \
         min(max_records, len(dispatches))
@@ -491,8 +513,7 @@ def replay_through_engine(trace: Trace, engine=None, eng_cfg=None,
                 n_scaled=n_scaled, batch=b, n_final=rec["n_final"],
                 executions=1, measured_s=measured_s, modeled_s=modeled_s,
                 measured_bytes=measured_bytes,
-                modeled_bytes=payload_table.get(
-                    f"denoising{n_scaled}", 0))
+                modeled_bytes=modeled_payload_bytes(n_scaled))
         else:
             g.executions += 1
             # min over executions: the steadiest steady-state sample

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 
@@ -118,3 +119,30 @@ def test_flash_custom_vjp_grads():
     assert abs(float(r - f)) < 1e-6 * max(1.0, abs(float(r)))
     for a, b in zip(gr, gf):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.parametrize("T,br", [(509, 256), (1, 8), (130, 64)])
+def test_int8_quantize_raw_kernel_ragged_rows(T, br):
+    """Regression: the raw Pallas kernel used to ``assert T % br == 0``
+    (a crash at any prime T); it now zero-pads to the block grid and
+    trims, and pad rows never contaminate the real per-row scales."""
+    from repro.kernels import int8_quant as q8
+    x = _n(T, 64)
+    q, s = q8.int8_quantize(jnp.asarray(x), br=br, interpret=True)
+    assert q.shape == (T, 64) and s.shape == (T, 1)
+    qr, sr = ref.int8_quantize_ref(jnp.asarray(x))
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)
+                               - qr.astype(jnp.int32)))) == 0
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+@given(st.integers(1, 300), st.integers(1, 96), st.integers(0, 5))
+@settings(max_examples=25, deadline=None)
+def test_int8_quantize_roundtrip_bound_property(T, d, seed):
+    """Per-row symmetric int8: |x - deq| <= scale/2 per element, at ANY
+    row count (the ragged-grid path included)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.standard_normal((T, d)) * 7).astype(np.float32))
+    q, s = ops.int8_quantize(x)
+    back = ops.int8_dequantize(q, s)
+    assert bool(jnp.all(jnp.abs(back - x) <= s * 0.5 + 1e-6))

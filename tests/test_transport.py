@@ -1,6 +1,7 @@
 """Transport property tests: serialization round trip, quantization error
 bounds, lossy channel accounting, transmission-model shape (paper Fig 4)."""
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 
@@ -12,6 +13,8 @@ from repro.core.transport import (
     lossy_transfer,
     pack_boundary,
     quantize_int8,
+    rowwise_dequantize_int8,
+    rowwise_quantize_int8,
     serialize,
     transmission_time,
     unpack_boundary,
@@ -92,3 +95,78 @@ def test_fig4_crossover():
             < transmission_time(small, WAN_LINK))
     assert (transmission_time(large, WAN_LINK)
             < transmission_time(large, LOCAL_LINK))
+
+
+# --------------------------------------------------------------------------
+# Serialization edge cases (deterministic twins of the property above,
+# pinned on the shapes that have historically broken codecs: empty and
+# 0-d tensors, both compression modes)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("compress", [False, True])
+def test_serialize_empty_and_0d(compress):
+    tree = {"empty": np.zeros((0, 3), np.float32),
+            "scalar": np.array(3.25, np.float32),
+            "i0d": np.array(-7, np.int32),
+            "dense": np.arange(6, dtype=np.float16).reshape(2, 3)}
+    out = deserialize(serialize(tree, compress=compress))
+    assert set(out) == set(tree)
+    for k, v in tree.items():
+        assert out[k].dtype == v.dtype and out[k].shape == v.shape
+        np.testing.assert_array_equal(out[k], v)
+
+
+@given(hnp.arrays(np.float32,
+                  hnp.array_shapes(min_dims=2, max_dims=2, max_side=48),
+                  elements=st.floats(-50, 50, width=32)))
+@settings(max_examples=60, deadline=None)
+def test_rowwise_int8_error_bound_property(x):
+    """Per-row symmetric int8 (the wire-format / Pallas-kernel scheme):
+    |x - deq| <= scale/2 per element, each row under ITS OWN scale."""
+    q, s = rowwise_quantize_int8(x)
+    back = rowwise_dequantize_int8(q, s)
+    assert np.all(np.abs(back - x) <= s * 0.5 + 1e-6)
+
+
+def test_compress_tree_int8_error_monotone_in_magnitude():
+    """The distributed gradient compressor's reported MSE grows with
+    leaf magnitude: int8 step size is max|leaf|/127, so scaling a leaf
+    by c scales the error by ~c^2.  Monotonicity is what the
+    error-feedback loop relies on."""
+    from repro.distributed.compression import compress_tree_int8
+    rng = np.random.default_rng(5)
+    base = rng.standard_normal((64, 64)).astype(np.float32)
+    errs = []
+    for scale in (0.1, 1.0, 10.0, 100.0):
+        _, err = compress_tree_int8({"g": base * scale})
+        errs.append(float(err))
+    assert all(b > a for a, b in zip(errs, errs[1:])), errs
+    # and identical-magnitude trees report identical error
+    _, e1 = compress_tree_int8({"g": base})
+    _, e2 = compress_tree_int8({"g": -base})
+    np.testing.assert_allclose(e1, e2, rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Lossy channel + boundary pack edge cases
+# --------------------------------------------------------------------------
+def test_lossy_transfer_extremes():
+    x = np.linspace(-1, 1, 257, dtype=np.float32)
+    y0, lost0 = lossy_transfer(x, 0.0, seed=1)
+    np.testing.assert_array_equal(y0, x)       # drop_prob 0: identity
+    assert lost0 == 0.0
+    y1, lost1 = lossy_transfer(x, 1.0, seed=1)
+    assert lost1 == 1.0                        # drop_prob 1: all zeros
+    np.testing.assert_array_equal(y1, np.zeros_like(x))
+    assert y1.dtype == x.dtype
+
+
+@pytest.mark.parametrize("mode", ["paper", "int8"])
+def test_pack_boundary_context_none(mode):
+    lat = np.random.default_rng(2).standard_normal((4, 8, 8)) \
+        .astype(np.float32)
+    out_lat, out_ctx = unpack_boundary(pack_boundary(lat, None, mode=mode))
+    assert out_ctx is None
+    assert out_lat.dtype == np.float32         # decode always lands fp32
+    assert out_lat.shape == lat.shape
+    tol = {"paper": 1e-6, "int8": 0.05}[mode]
+    assert np.max(np.abs(out_lat - lat)) <= tol

@@ -1,0 +1,322 @@
+"""Wire-format planning at the split boundary (docs/transport.md).
+
+Four layers, matching the feature's stack:
+
+  * ``WireFormat`` accounting: ``encoded_bytes`` is EXACT — equal to
+    ``len(encode_wire(...))`` for every format — and the closed-form
+    ``wire_nbytes`` agrees wherever it is defined (non-compressed);
+  * round-trip fidelity: every format decodes back to fp32 within its
+    planning error currency, through both ``decode_wire`` and the
+    self-describing ``unpack_boundary``;
+  * planner behavior: the wire stage picks non-fp32 only when the
+    error budget admits it AND the link makes it pay, ties go to fp32,
+    and the decision re-derives field-exactly through
+    ``verify_decisions`` on BOTH simulation cores;
+  * golden anchors: an *active but empty* wire stage (fp32-pinned
+    formats, or a zero error budget) is bit-identical to no wire stage
+    at all — the v1 golden trace, the v2 golden trace, and a
+    preemption-heavy trace digest all reproduce digit for digit.
+"""
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core.telemetry import DeviceProfile
+from repro.core.transport import (
+    WIRE_FORMATS,
+    WirePolicy,
+    decode_wire,
+    encode_wire,
+    encoded_bytes,
+    get_wire_format,
+    pack_boundary_wire,
+    rowwise_dequantize_int8,
+    rowwise_quantize_int8,
+    unpack_boundary,
+    wire_nbytes,
+)
+from repro.core.planner import Planner, PlanRequest
+from repro.serving.fleet_sim import SimConfig, run_fleet_sim
+from repro.serving.replay import read_trace, verify_decisions
+from repro.serving.simulator import CALIBRATED
+
+GOLDEN = dict(policy="variable+batching", rate=12.0, duration=40.0,
+              seed=7, gpus_init=10, max_gpus=32, metrics_interval_s=10.0)
+
+#: Pinned fp32: the wire stage is configured but has zero non-fp32
+#: candidates, which the planner contract promises is a no-op.
+PINNED = WirePolicy(formats=("fp32",))
+
+SLOW = DeviceProfile(device_id="slow", r_dev=2.0,
+                     k_decode=CALIBRATED.k_decode,
+                     rtt=0.35, bandwidth=1.2e6)
+LOCAL = DeviceProfile(device_id="local", r_dev=50.0,
+                      k_decode=CALIBRATED.k_decode)
+
+CLOSED_FORM = [n for n, f in WIRE_FORMATS.items() if not f.compress]
+
+
+def _tree(seed=0, rows=4):
+    rng = np.random.default_rng(seed)
+    return {"latent": rng.standard_normal((rows, 32, 32))
+            .astype(np.float32),
+            "context": rng.standard_normal((2, 7, 96)).astype(np.float32)}
+
+
+# --------------------------------------------------------------------------
+# WireFormat accounting
+# --------------------------------------------------------------------------
+def test_registry_sanity():
+    for name, f in WIRE_FORMATS.items():
+        assert f.name == name
+        assert 0.0 < f.ratio <= 1.0
+        assert f.error >= 0.0
+        assert get_wire_format(name) is f
+        assert get_wire_format(f) is f
+    with pytest.raises(ValueError):
+        get_wire_format("fp8")           # not a registered format
+
+
+def test_t_wire_fp32_is_exactly_zero():
+    """The delta model's bit-identity anchor: shipping dense fp32 has
+    NO wire term — not a small one, literally 0.0."""
+    fp32 = WIRE_FORMATS["fp32"]
+    assert fp32.t_wire(262144.0, 1.2e6) == 0.0
+    assert fp32.codec_s(1e9) == 0.0
+
+
+def test_t_wire_sign():
+    """On a slow link every non-fp32 format's byte savings beat its
+    codec charge (negative delta); codec_s itself is always >= 0."""
+    for name, f in WIRE_FORMATS.items():
+        assert f.codec_s(262144.0) >= 0.0
+        if name != "fp32":
+            assert f.t_wire(262144.0, 1.2e6) < 0.0
+
+
+@pytest.mark.parametrize("fmt", list(WIRE_FORMATS))
+def test_encoded_bytes_is_exact(fmt):
+    """``encoded_bytes`` == len of the actual encoding, every format —
+    the planner's byte accounting is not an estimate."""
+    tree = _tree()
+    assert encoded_bytes(tree, fmt) == len(encode_wire(tree, fmt))
+
+
+@pytest.mark.parametrize("fmt", CLOSED_FORM)
+def test_wire_nbytes_closed_form(fmt):
+    tree = _tree()
+    shapes = {n: x.shape for n, x in tree.items()}
+    assert wire_nbytes(shapes, fmt) == len(encode_wire(tree, fmt))
+
+
+def test_wire_nbytes_raises_for_compressed():
+    with pytest.raises(ValueError):
+        wire_nbytes({"latent": (4, 32, 32)}, "int8_zlib")
+
+
+def test_byte_savings_ordering():
+    """Measured sizes honor the registry's ratio ordering on a dense
+    payload (the planner's ranking currency is real)."""
+    tree = _tree(rows=8)
+    sizes = {f: len(encode_wire(tree, f)) for f in WIRE_FORMATS}
+    assert sizes["topk"] < sizes["int8_zlib"] < sizes["int8"] \
+        < sizes["fp16"] < sizes["fp32"]
+
+
+# --------------------------------------------------------------------------
+# Round-trip fidelity
+# --------------------------------------------------------------------------
+def test_decode_wire_roundtrip_errors():
+    tree = _tree()
+    lat = tree["latent"]
+    for fmt, tol in (("fp32", 0.0), ("fp16", 1e-3),
+                     ("int8", 0.05), ("int8_zlib", 0.05)):
+        out = decode_wire(encode_wire(tree, fmt))
+        assert set(out) == {"latent", "context"}
+        assert out["latent"].dtype == np.float32
+        err = np.max(np.abs(out["latent"] - lat))
+        assert err <= tol, (fmt, err)
+    # top-k keeps the largest 5%: everything it keeps is exact-ish,
+    # and the reconstruction is the magnitude-truncated tensor
+    out = decode_wire(encode_wire(tree, "topk"))
+    kept = out["latent"] != 0.0
+    assert 0.04 <= kept.mean() <= 0.06
+    assert np.max(np.abs(out["latent"][kept] - lat[kept])) < 2e-2
+
+
+def test_rowwise_int8_error_bound_per_element():
+    """Symmetric per-row int8: |x - deq| <= scale/2 per element."""
+    rng = np.random.default_rng(3)
+    x = (rng.standard_normal((37, 61)) * 10).astype(np.float32)
+    q, s = rowwise_quantize_int8(x)
+    assert q.dtype == np.int8 and s.shape == (37, 1)
+    back = rowwise_dequantize_int8(q, s)
+    assert np.all(np.abs(back - x) <= s * 0.5 + 1e-6)
+
+
+@pytest.mark.parametrize("fmt", list(WIRE_FORMATS))
+@pytest.mark.parametrize("with_ctx", [True, False])
+def test_pack_boundary_wire_self_describing(fmt, with_ctx):
+    """``unpack_boundary`` decodes every wire format without being told
+    which one it is (so the device simulator never changed)."""
+    tree = _tree(seed=1)
+    ctx = tree["context"] if with_ctx else None
+    lat, out_ctx = unpack_boundary(
+        pack_boundary_wire(tree["latent"], ctx, fmt))
+    assert lat.dtype == np.float32
+    assert lat.shape == tree["latent"].shape
+    if with_ctx:
+        assert out_ctx is not None and out_ctx.shape == ctx.shape
+    else:
+        assert out_ctx is None
+
+
+def test_wire_policy_json_roundtrip():
+    pol = WirePolicy(formats=("fp32", "int8"), payload_bytes=1e5,
+                     error_budget=0.01)
+    assert WirePolicy.from_json(pol.to_json()) == pol
+    with pytest.raises(ValueError):
+        WirePolicy(formats=("fp32", "nope"))
+
+
+# --------------------------------------------------------------------------
+# Planner behavior
+# --------------------------------------------------------------------------
+def _plan(wire, prof=SLOW):
+    pl = Planner(CALIBRATED, policy="variable+batching", wire=wire)
+    return pl.plan(PlanRequest(device=prof, request_id="t"))
+
+
+def test_budget_zero_pins_fp32():
+    """The default error budget is 0.0: no lossy format is admissible,
+    so an active WirePolicy with every format still plans fp32."""
+    d = _plan(WirePolicy())
+    assert d.wire == "fp32"
+    assert _plan(None).wire == "fp32"
+
+
+def test_slow_link_spends_the_budget():
+    d = _plan(WirePolicy(error_budget=5e-3))
+    assert d.wire in ("int8", "int8_zlib")
+    assert d.wire in [e["value"] for e in d.trace
+                      if e["field"] == "wire"]
+    assert "wire" in d.explain()
+    # budget excludes what it excludes: topk (error .25) never admitted
+    assert all(WIRE_FORMATS[e["value"]].error <= 5e-3
+               for e in d.trace if e["field"] == "wire")
+
+
+def test_budget_ordering_monotone():
+    """A larger budget can only buy a cheaper-or-equal format."""
+    lat = {b: _plan(WirePolicy(error_budget=b)).latency
+           for b in (0.0, 5e-4, 5e-3, 0.30)}
+    assert lat[5e-4] <= lat[0.0]
+    assert lat[5e-3] <= lat[5e-4]
+    assert lat[0.30] <= lat[5e-3]
+
+
+def test_local_only_keeps_fp32():
+    """n_final == 0 ships nothing: the wire stage must not manufacture
+    a fictitious transfer discount."""
+    d = _plan(WirePolicy(error_budget=0.30), prof=LOCAL)
+    assert d.n_final == 0 and d.wire == "fp32"
+
+
+def test_decision_json_carries_wire():
+    d = _plan(WirePolicy(error_budget=5e-3))
+    payload = d.to_json()
+    assert payload["wire"] == d.wire
+    from repro.core.planner import replay
+    assert replay(payload).to_json() == payload
+
+
+def test_planner_config_roundtrip_rebuilds_candidates():
+    pol = WirePolicy(error_budget=5e-3)
+    pl = Planner(CALIBRATED, policy="variable+batching", wire=pol)
+    clone = Planner.from_config(pl.config_json())
+    assert clone.wire == pl.wire
+    assert clone._wire_candidates == pl._wire_candidates
+    want = pl.plan(PlanRequest(device=SLOW, request_id="t")).to_json()
+    got = clone.plan(PlanRequest(device=SLOW, request_id="t")).to_json()
+    assert got == want
+
+
+@pytest.mark.parametrize("core", ["v1", "v2"])
+def test_wire_trace_verifies_on_both_cores(tmp_path, core):
+    """Every recorded decision on a wire-active slow-link run re-derives
+    field-exactly (wire included — it is a TRACE_FIELDS member)."""
+    import dataclasses
+    from repro.serving.simulator import table4_fleet
+    fleet = [dataclasses.replace(p, bandwidth=1.2e6, rtt=p.rtt + 0.05)
+             for p in table4_fleet(seed=3, params=CALIBRATED)]
+    path = str(tmp_path / f"wire_{core}.jsonl")
+    res = run_fleet_sim(SimConfig(
+        policy="variable+batching", rate=8.0, duration=20.0, seed=3,
+        fleet=fleet, gpus_init=10, max_gpus=32, core=core,
+        wire=WirePolicy(error_budget=5e-3), trace_out=path))
+    trace = read_trace(path)
+    wires = {r["decision"]["wire"] for r in trace.plans()}
+    assert wires - {"fp32"}, "wire stage never fired on the slow fleet"
+    report = verify_decisions(trace)
+    assert report.ok, report.mismatches[:3]
+    assert res.n_completed() > 0
+
+
+def test_active_wire_blocks_v2_fast_lane():
+    """The v2 chunked fast lane inlines raw rtt tails, so an active wire
+    stage must fall back to the wheel — loudly."""
+    res = run_fleet_sim(SimConfig(core="v2", exact_stats=False,
+                                  wire=WirePolicy(error_budget=5e-3),
+                                  **GOLDEN))
+    assert not res.fast_lane
+    assert "wire" in res.fast_lane_blockers
+    # ...and an EMPTY wire stage does not block it
+    res = run_fleet_sim(SimConfig(core="v2", exact_stats=False,
+                                  wire=PINNED, **GOLDEN))
+    assert res.fast_lane
+
+
+# --------------------------------------------------------------------------
+# Golden anchors: empty wire stage == no wire stage, bit for bit
+# --------------------------------------------------------------------------
+def _digest(res):
+    sig = hashlib.sha256()
+    for c in res.completed:
+        sig.update(f"{c.request_id}:{c.completion:.9f}:{c.batched:d};"
+                   .encode())
+    return (res.n_arrivals, len(res.completed), res.violations,
+            round(res.total_gpu_seconds, 9),
+            round(res.latency_percentile(99), 9), sig.hexdigest()[:16])
+
+
+@pytest.mark.parametrize("wire", [PINNED, WirePolicy()],
+                         ids=["fp32-pinned", "budget-zero"])
+def test_v1_golden_trace_with_pinned_wire(wire):
+    """The PR-2/PR-3 golden trace (expected tuple copied verbatim from
+    tests/test_fleet_sim.py::test_golden_trace)."""
+    res = run_fleet_sim(SimConfig(wire=wire, **GOLDEN))
+    assert _digest(res) == (490, 490, 0, 249.312, 8.4873321,
+                            "af766f3924e39378")
+
+
+def test_v2_golden_trace_with_pinned_wire():
+    """v2's pinned baseline (tests/test_sim_core_v2.py::V2_GOLDEN)."""
+    res = run_fleet_sim(SimConfig(core="v2", wire=PINNED, **GOLDEN))
+    assert _digest(res) == (465, 465, 4, 236.352, 8.494425237,
+                            "0a11408760296ce3")
+
+
+def test_preemption_digest_with_pinned_wire():
+    """Replan-on-preemption paths (preempt -> replan credit -> requeue)
+    under an empty wire stage: bit-identical to no wire stage."""
+    from repro.serving.simulator import table4_capacity
+    cap = table4_capacity(base_count=6, spot_count=10, base_max=12,
+                          spot_max=24)
+    kw = dict(policy="variable", rate=10.0, duration=30.0, seed=1,
+              capacity=cap, dispatch="edf",
+              preempt_trace=[(8.0, "spot", 3), (15.0, "spot", 2)])
+    base = run_fleet_sim(SimConfig(**kw))
+    pinned = run_fleet_sim(SimConfig(wire=PINNED, **kw))
+    assert base.replans > 0          # the preemption machinery did fire
+    assert _digest(base) == _digest(pinned)
