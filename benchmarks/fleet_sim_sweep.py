@@ -332,6 +332,65 @@ def wire_bytes_cell(max_records=4):
     return rows
 
 
+#: The multiprocess sharding demonstration cell (docs/sim_core_v2.md,
+#: "Multiprocess sharding"): the same config run three ways — the plain
+#: v2 fast lane (the fidelity reference), the sharded BSP lane with
+#: processes=1 (in-process, deterministic), and the sharded lane with P
+#: spawned workers.  The two sharded arms must be BIT-IDENTICAL
+#: (P-invariance); the sharded-vs-plain gap records the chunk-granular
+#: approximation at this scale.  Rate is deliberately moderate-to-high:
+#: per-cohort batching dilutes at low per-lane rates (see the doc).
+SHARDED = dict(rate=600.0, duration=40.0, seed=7, gpus_init=300,
+               max_gpus=800, metrics_interval_s=10.0, shard_cohorts=4)
+
+
+def sharded_comparison(processes=2, smoke=False):
+    """Cohort-sharded BSP lane vs the plain v2 fast lane on an identical
+    config, plus the processes=1 in-process arm that pins P-invariance
+    (bit-identical aggregates regardless of worker count)."""
+    dur = SHARDED["duration"] if smoke else SHARDED["duration"] * 3
+    common = dict(policy="variable+batching", params=CALIBRATED,
+                  rate=SHARDED["rate"], duration=dur,
+                  seed=SHARDED["seed"], gpus_init=SHARDED["gpus_init"],
+                  max_gpus=SHARDED["max_gpus"],
+                  metrics_interval_s=SHARDED["metrics_interval_s"],
+                  core="v2", exact_stats=False)
+    out = {"config": {**{k: SHARDED[k] for k in SHARDED},
+                      "duration": dur},
+           "processes": processes, "cpus": os.cpu_count() or 1}
+    arms = (("v2_plain", dict()),
+            ("sharded_p1", dict(processes=1,
+                                shard_cohorts=SHARDED["shard_cohorts"])),
+            (f"sharded_p{processes}",
+             dict(processes=processes,
+                  shard_cohorts=SHARDED["shard_cohorts"])))
+    for label, kw in arms:
+        t0 = time.perf_counter()
+        res = run_fleet_sim(SimConfig(**common, **kw))
+        rec = _cell_record("variable+batching", SHARDED["rate"], res)
+        del rec["per_class"]
+        rec["wall_s"] = round(time.perf_counter() - t0, 3)
+        out[label] = rec
+    p1, pn = out["sharded_p1"], out[f"sharded_p{processes}"]
+    out["p_invariant"] = all(
+        p1[k] == pn[k] for k in
+        ("n_arrivals", "n_completed", "violations", "total_gpu_seconds",
+         "peak_gpus", "final_gpus", "released_gpus", "n_events",
+         "p50_latency", "p99_latency", "utilization", "per_shard"))
+    ref = out["v2_plain"]
+    out["vs_plain"] = {
+        "violation_rate_gap": round(
+            abs(pn["violation_rate"] - ref["violation_rate"]), 6),
+        "gpu_seconds_rel_gap": round(
+            abs(pn["total_gpu_seconds"] - ref["total_gpu_seconds"])
+            / max(ref["total_gpu_seconds"], 1e-9), 6),
+        "p99_rel_gap": round(
+            abs(pn["p99_latency"] - ref["p99_latency"])
+            / max(ref["p99_latency"], 1e-9), 6),
+    }
+    return out
+
+
 def sample_decision(seed=0):
     """One audited PlanDecision on the Table-4 reference device — the
     unified-planner protocol record (JSON-replayable; drift in the
@@ -484,7 +543,26 @@ def main():
                          "+ engine bytes reconciliation")
     ap.add_argument("--core", choices=("v1", "v2"), default="v1",
                     help="simulation core for the mobility/wire cell")
+    ap.add_argument("--processes", type=int, default=0, metavar="P",
+                    help="run ONLY the sharded-vs-single comparison "
+                         "cell with P workers (docs/sim_core_v2.md)")
     args = ap.parse_args()
+
+    if args.processes:
+        sh = sharded_comparison(processes=args.processes,
+                                smoke=args.smoke)
+        key = f"sharded_mp{args.processes}"
+        _merge_write(args.out, {key: sh})
+        print(f"wrote sharded cell '{key}' to {args.out}")
+        ref, pn = sh["v2_plain"], sh[f"sharded_p{args.processes}"]
+        print(f"sharded P={args.processes} (cpus={sh['cpus']}): "
+              f"p_invariant={sh['p_invariant']} "
+              f"wall plain={ref['wall_s']}s sharded={pn['wall_s']}s; "
+              f"viol_rate plain={ref['violation_rate']:.5f} "
+              f"sharded={pn['violation_rate']:.5f} "
+              f"(gap {sh['vs_plain']['violation_rate_gap']}); "
+              f"p99 gap {sh['vs_plain']['p99_rel_gap']}")
+        return
 
     if args.wire:
         w = wire_comparison(

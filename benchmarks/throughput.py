@@ -89,23 +89,36 @@ def _peak_rss_mb():
                  / 1024.0, 1)
 
 
+def _peak_rss_children_mb():
+    """Peak RSS over every waited-for child (RUSAGE_CHILDREN): without
+    this the multiprocess cells under-report memory — worker processes
+    hold the cohort state, not the coordinator.  Cumulative across the
+    whole bench process; the per-cell truth is worker_peak_rss_mb."""
+    return round(resource.getrusage(resource.RUSAGE_CHILDREN).ru_maxrss
+                 / 1024.0, 1)
+
+
 def run_cell(duration: float, plan_cache: bool, exact_stats: bool,
-             reps: int = 2, core: str = "v1"):
+             reps: int = 2, core: str = "v1", processes: int = 1):
     """Best-of-``reps`` wall clock for one (size, config) cell."""
     best, res = None, None
     rss_before = _vmrss_mb()
     for _ in range(reps):
         cfg = SimConfig(duration=duration, plan_cache=plan_cache,
-                        exact_stats=exact_stats, core=core, **CELL)
+                        exact_stats=exact_stats, core=core,
+                        processes=processes, **CELL)
         gc.collect()
         t0 = time.perf_counter()
         res = run_fleet_sim(cfg)
         wall = time.perf_counter() - t0
         best = wall if best is None else min(best, wall)
+    workers = list(res.worker_peak_rss_mb)
     return {
         "core": core,
         "plan_cache": plan_cache,
         "exact_stats": exact_stats,
+        "processes": res.processes,
+        "shard_chunk_s": res.shard_chunk_s,
         "arrivals": res.n_arrivals,
         "completed": res.n_completed(),
         "violations": res.violations,
@@ -122,6 +135,9 @@ def run_cell(duration: float, plan_cache: bool, exact_stats: bool,
         "rss_before_mb": rss_before,
         "rss_after_mb": _vmrss_mb(),
         "peak_rss_mb": _peak_rss_mb(),
+        "peak_rss_children_mb": _peak_rss_children_mb(),
+        "worker_peak_rss_mb": [round(w, 1) for w in workers],
+        "workers_peak_rss_sum_mb": round(sum(workers), 1),
     }
 
 
@@ -159,7 +175,7 @@ def plan_microbench(n: int = 30000):
     return out
 
 
-def bench(smoke: bool = False, core: str = "v1"):
+def bench(smoke: bool = False, core: str = "v1", processes: int = 1):
     sizes = ["1e4"] if smoke else V1_SIZES
     t0 = time.perf_counter()
     cells = {}
@@ -168,8 +184,10 @@ def bench(smoke: bool = False, core: str = "v1"):
         reps = 1 if label == "1e6" else 2
         cells[label] = {"duration_s": duration,
                         "optimized": run_cell(duration, True, False,
-                                              reps=reps, core=core)}
-        if label != "1e6":                     # exact 1e6 is the old OOM
+                                              reps=reps, core=core,
+                                              processes=processes)}
+        if label != "1e6" and processes == 1:  # exact 1e6 is the old OOM
+            # (exact_stats blocks the fast lane, so no sharded variant)
             cells[label]["legacy_config"] = run_cell(
                 duration, plan_cache=False, exact_stats=True, reps=reps,
                 core=core)
@@ -209,12 +227,67 @@ def bench(smoke: bool = False, core: str = "v1"):
         "bench": "throughput",
         "smoke": smoke,
         "core": core,
+        "processes": processes,
         "cell_config": {k: v for k, v in CELL.items()},
         "wall_s": round(time.perf_counter() - t0, 2),
         "pre_pr_baseline": PRE_PR_BASELINE,
         "cells": cells,
         "speedup": speedups,
         "plan_microbench": plan_microbench(5000 if smoke else 30000),
+    }
+
+
+#: multiprocess sweep sizes (duration at CELL's 10^4/s rate); 1e8 is
+#: the ROADMAP "full diurnal weeks" scale that only sharding reaches
+MP_SIZES = {"1e7": 1000.0, "1e8": 10000.0}
+
+
+def bench_mp(workers: int = 4, sizes=("1e7", "1e8")):
+    """Pinned multiprocess cells: sharded v2 fast lanes
+    (``SimConfig.processes``, serving/shard_sim.py) vs the
+    single-process v2 fast lane on the same CELL config.
+
+    The 1e7 comparison pins the parallel speedup target (>= 3x
+    events/sec with 4 workers — which presumes >= ``workers`` cores;
+    ``cpus`` records what this host actually had).  The 1e8 cell pins
+    that the scale completes at all, with wall clock and coordinator +
+    per-worker peak RSS (memory stays sub-linear: each worker holds
+    only its cohorts' buffers)."""
+    t0 = time.perf_counter()
+    cpus = os.cpu_count() or 1
+    cells = {}
+    speedups = {}
+    if "1e7" in sizes:
+        single = run_cell(MP_SIZES["1e7"], True, False, reps=1, core="v2")
+        mp = run_cell(MP_SIZES["1e7"], True, False, reps=1, core="v2",
+                      processes=workers)
+        cells["1e7"] = {"duration_s": MP_SIZES["1e7"],
+                        "core_v2": single,
+                        f"core_v2_mp{workers}": mp}
+        speedups["1e7"] = {
+            f"mp{workers}_vs_v2_events_per_s": round(
+                mp["events_per_s"] / single["events_per_s"], 2),
+            f"mp{workers}_vs_v2_wall": round(
+                single["wall_s"] / mp["wall_s"], 2),
+        }
+    if "1e8" in sizes:
+        mp8 = run_cell(MP_SIZES["1e8"], True, False, reps=1, core="v2",
+                       processes=workers)
+        cells["1e8"] = {"duration_s": MP_SIZES["1e8"],
+                        f"core_v2_mp{workers}": mp8}
+        speedups["1e8"] = {"wall_s": mp8["wall_s"],
+                           "events_per_s": mp8["events_per_s"],
+                           "peak_rss_mb": mp8["peak_rss_mb"],
+                           "workers_peak_rss_sum_mb":
+                           mp8["workers_peak_rss_sum_mb"]}
+    return {
+        "workers": workers,
+        "cpus": cpus,
+        "note": "events/sec speedup presumes >= workers cores; "
+                "cpus records this host",
+        "wall_s": round(time.perf_counter() - t0, 2),
+        "cells": cells,
+        "speedup": speedups,
     }
 
 
@@ -247,9 +320,17 @@ def main():
     ap.add_argument("--core", choices=("v1", "v2"), default="v1",
                     help="simulation core for the per-size cells; the "
                          "full v1 run also records the v2 1e6/1e7 cells")
+    ap.add_argument("--processes", type=int, default=1,
+                    help="cohort-sharded workers for the per-size cells "
+                         "(forces the v2 core; see serving/shard_sim.py)")
+    ap.add_argument("--mp", action="store_true",
+                    help="run the pinned multiprocess 1e7/1e8 cells and "
+                         "merge them into the existing 'throughput' key")
+    ap.add_argument("--mp-workers", type=int, default=4)
+    ap.add_argument("--mp-sizes", default="1e7,1e8",
+                    help="comma list from {1e7,1e8} for --mp")
     args = ap.parse_args()
 
-    payload = bench(smoke=args.smoke, core=args.core)
     existing = {}
     if os.path.exists(args.out):
         with open(args.out) as f:
@@ -257,7 +338,48 @@ def main():
                 existing = json.load(f)
             except ValueError:
                 existing = {}
-    key = "throughput" if args.core == "v1" else f"throughput_{args.core}"
+
+    if args.mp:
+        # read-merge-write INTO the pinned "throughput" key: the mp
+        # cells ride alongside the existing per-size cells
+        mp_payload = bench_mp(workers=args.mp_workers,
+                              sizes=tuple(args.mp_sizes.split(",")))
+        thr = existing.setdefault(
+            "throughput", {"bench": "throughput", "cells": {},
+                           "speedup": {},
+                           "cell_config": dict(CELL)})
+        thr["mp"] = {k: mp_payload[k]
+                     for k in ("workers", "cpus", "note", "wall_s")}
+        for label, cell in mp_payload["cells"].items():
+            thr["cells"].setdefault(label, {"duration_s":
+                                            cell["duration_s"]}).update(
+                {k: v for k, v in cell.items() if k != "duration_s"})
+        for label, sp in mp_payload["speedup"].items():
+            thr["speedup"].setdefault(label, {}).update(sp)
+        with open(args.out, "w") as f:
+            json.dump(existing, f, indent=1)
+        print(f"wrote multiprocess cells to {args.out} "
+              f"({mp_payload['wall_s']}s, cpus={mp_payload['cpus']})")
+        for label, cell in mp_payload["cells"].items():
+            for key, o in cell.items():
+                if not isinstance(o, dict):
+                    continue
+                print(f"{label}[{key}]: {o['events_per_s']:>9.0f} "
+                      f"events/s wall={o['wall_s']}s "
+                      f"rss={o['peak_rss_mb']}MB "
+                      f"workers={o['worker_peak_rss_mb']}MB")
+            sp = mp_payload["speedup"].get(label, {})
+            if sp:
+                print(f"  speedup: {sp}")
+        return
+
+    core = args.core
+    if args.processes > 1 and core != "v2":
+        core = "v2"        # sharding is a v2 fast-lane mode
+    payload = bench(smoke=args.smoke, core=core, processes=args.processes)
+    key = "throughput" if core == "v1" else f"throughput_{core}"
+    if args.processes > 1:
+        key += f"_mp{args.processes}"
     existing[key] = payload
     with open(args.out, "w") as f:
         json.dump(existing, f, indent=1)

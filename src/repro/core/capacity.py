@@ -290,6 +290,17 @@ class CloudCapacity:
                               cost_weights=cost_weights)
 
 
+def slice_evenly(total: int, parts: int) -> List[int]:
+    """Proportional capacity slices: split ``total`` GPUs across ``parts``
+    cohort shards, remainder to the lowest cohort ids.  Deterministic in
+    cohort id (never in worker rank), which is what keeps the sharded
+    simulation's capacity timeline independent of the worker count."""
+    if parts <= 0:
+        raise ValueError(f"parts must be > 0, got {parts}")
+    base, rem = divmod(int(total), parts)
+    return [base + 1 if c < rem else base for c in range(parts)]
+
+
 def reference_params(params, capacity: CloudCapacity):
     """Derive scalar ``CostParams`` whose ``r_cloud`` is the capacity's
     reference rate — the bridge that keeps every closed-form solve

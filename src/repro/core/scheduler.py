@@ -441,3 +441,41 @@ def allocate_gpus_heterogeneous(summary: ScheduleSummary, p: CostParams,
                                    discounts=rate_discounts)
     return HeteroAllocationPlan(targets=targets, reference=ref_plan,
                                 needed_supply=needed_supply, floors=floors)
+
+
+def fold_demand_counts(counts_iterable) -> Dict[int, int]:
+    """Fold per-shard ``{n_final: count}`` demand dicts into one fleet-wide
+    dict (exact integer sums).  The multiprocess shard coordinator folds
+    each barrier's per-cohort demand reports through this before
+    re-planning capacity; iterate shards in a deterministic (cohort-id)
+    order so every fold is reproducible."""
+    total: Dict[int, int] = {}
+    for counts in counts_iterable:
+        for n, c in counts.items():
+            total[n] = total.get(n, 0) + c
+    return total
+
+
+def plan_capacity_targets(policy: str, wg_counts: Dict[int, int],
+                          p: CostParams, capacity,
+                          current: Dict[str, int], horizon_s: float,
+                          headroom: float = 1.0,
+                          release_threshold: float = 0.5,
+                          demands=None, demand_c_batch: float = 1.0,
+                          rate_discounts=None) -> HeteroAllocationPlan:
+    """The §4.5 re-plan from a demand-window count dict: build the
+    ``w_group = n * count`` workloads (integer-exact — bitwise equal to
+    rescanning the window) and run ``allocate_gpus_heterogeneous``.
+
+    This is the ONE capacity entry point shared by the v1 event loop,
+    the v2 fast lane, and the multiprocess shard coordinator, so the
+    three autoscaler call sites cannot drift apart."""
+    wg = {n: float(n * c) for n, c in wg_counts.items() if c > 0}
+    summary = ScheduleSummary(
+        name=policy, assignments=[], total_gpu_time=0.0,
+        latencies=[], violations=0, group_workloads=wg)
+    return allocate_gpus_heterogeneous(
+        summary, p, capacity, current=current, horizon_s=horizon_s,
+        headroom=headroom, release_threshold=release_threshold,
+        demands=demands, demand_c_batch=demand_c_batch,
+        rate_discounts=rate_discounts)

@@ -99,6 +99,7 @@ from repro.core.scheduler import (
     Assignment,
     ScheduleSummary,
     allocate_gpus_heterogeneous,
+    plan_capacity_targets,
 )
 from repro.core.sla import AdaptiveSLAController, DeadlineTracker, SLAPolicy
 from repro.core.telemetry import (
@@ -260,6 +261,29 @@ class SimConfig:
     #: fast lane (nothing can be silently ignored); "off" always runs
     #: the wheel.
     v2_fast: str = "auto"
+    #: v2 only (docs/sim_core_v2.md §Multiprocess sharding): worker
+    #: processes for the cohort-sharded fast lane.  1 (default) is
+    #: bit-identical to the single-process fast lane; > 1 partitions the
+    #: fleet into ``shard_cohorts`` cohort shards run as parallel fast
+    #: lanes with a barrier'd capacity exchange every ``shard_chunk_s``.
+    #: Any fast-lane blocker (mobility, wire, preemption, ...) falls the
+    #: run back to the single-process path — loudly, via
+    #: ``fast_lane_blockers`` — because the shard workers ARE fast lanes.
+    processes: int = 1
+    #: number of cohort shards the fleet/arrival stream is partitioned
+    #: into.  None auto-sizes to ``max(8, processes)``; the SIMULATION
+    #: depends only on (seed, shard_cohorts), never on ``processes`` —
+    #: each cohort draws rng substreams derived from the seed + cohort
+    #: id, so results are identical for any worker count (the
+    #: P-invariance anchor).  Setting this with processes=1 runs the
+    #: sharded semantics in-process (no workers spawned).
+    shard_cohorts: Optional[int] = None
+    #: BSP barrier width in simulated seconds: at each multiple the
+    #: workers exchange demand/queue/utilization aggregates and the
+    #: coordinator re-plans §4.5 capacity once, fleet-wide.  None
+    #: defaults to ``autoscale_interval_s`` (the §4.5 cadence) or
+    #: ``metrics_interval_s`` when autoscale is off.
+    shard_chunk_s: Optional[float] = None
 
     def validate(self) -> None:
         """Config cross-checks shared by both cores (raise early, not
@@ -271,8 +295,34 @@ class SimConfig:
         if self.v2_fast not in ("auto", "require", "off"):
             raise ValueError(f"unknown v2_fast {self.v2_fast!r}; "
                              f"expected 'auto', 'require' or 'off'")
+        if self.processes < 1:
+            raise ValueError(f"processes must be >= 1, got {self.processes}")
+        if self.shard_cohorts is not None and self.shard_cohorts < 1:
+            raise ValueError(f"shard_cohorts must be >= 1, "
+                             f"got {self.shard_cohorts}")
+        if self.shard_chunk_s is not None and self.shard_chunk_s <= 0:
+            raise ValueError(f"shard_chunk_s must be > 0, "
+                             f"got {self.shard_chunk_s}")
+        if (self.processes > 1 or self.shard_cohorts is not None) \
+                and self.core != "v2":
+            raise ValueError("multiprocess sharding (processes > 1 / "
+                             "shard_cohorts) requires core='v2'")
         if self.mobility is not None:
             self.mobility.validate()
+
+    def resolved_shard_cohorts(self) -> int:
+        """Cohort count the sharded path runs with.  The default couples
+        to ``processes`` only beyond 8 workers, so results are invariant
+        across processes in {1..8} without pinning shard_cohorts."""
+        if self.shard_cohorts is not None:
+            return self.shard_cohorts
+        return max(8, self.processes)
+
+    def resolved_shard_chunk_s(self) -> float:
+        if self.shard_chunk_s is not None:
+            return self.shard_chunk_s
+        return (self.autoscale_interval_s if self.autoscale
+                else self.metrics_interval_s)
 
     def build_capacity(self) -> CloudCapacity:
         if self.capacity is not None:
@@ -838,6 +888,20 @@ class FleetSimResult:
     #: the blocking options in ``fast_lane_blockers`` (loud fallback)
     fast_lane: Optional[bool] = None
     fast_lane_blockers: List[str] = dataclasses.field(default_factory=list)
+    # multiprocess cohort sharding (serving.shard_sim;
+    # docs/sim_core_v2.md §Multiprocess sharding).  processes is the
+    # worker count the run ACTUALLY used (1 when sharding fell back or
+    # was never requested); shard_chunk_s the resolved barrier width
+    # (None unsharded); per_shard one record per cohort shard —
+    # arrivals/events/jobs/completed/violations/gpu_seconds and the
+    # worker that ran it.  Counters in per_shard sum exactly to the
+    # run-level fields.
+    processes: int = 1
+    shard_chunk_s: Optional[float] = None
+    per_shard: List[Dict] = dataclasses.field(default_factory=list)
+    #: per-worker peak RSS (MB, ru_maxrss) reported by each shard worker
+    #: at exit — the memory side of the multiprocess bench cells
+    worker_peak_rss_mb: List[float] = dataclasses.field(default_factory=list)
 
     def n_completed(self) -> int:
         return (self.stream.count if self.stream is not None
@@ -902,6 +966,10 @@ class FleetSimResult:
             "net_replans": self.net_replans,
             "fast_lane": self.fast_lane,
             "fast_lane_blockers": self.fast_lane_blockers,
+            "processes": self.processes,
+            "shard_chunk_s": self.shard_chunk_s,
+            "per_shard": self.per_shard,
+            "worker_peak_rss_mb": self.worker_peak_rss_mb,
             "exact_stats": self.stream is None,
             "n_events": self.n_events,
             "plan_calls": self.plan_calls,
@@ -1164,7 +1232,11 @@ class FleetSimulator:
             net_replans=self.n_net_replans,
             fast_lane=getattr(self, "_fast_lane", None),
             fast_lane_blockers=list(getattr(self, "_fast_blockers_rec",
-                                            ())))
+                                            ())),
+            processes=getattr(self, "_shard_processes", 1),
+            shard_chunk_s=getattr(self, "_shard_chunk_s", None),
+            per_shard=list(getattr(self, "_per_shard", ())),
+            worker_peak_rss_mb=list(getattr(self, "_worker_rss_mb", ())))
 
     # -- adaptive SLA ------------------------------------------------------
     def _set_t_lim(self, t_lim: float) -> None:
@@ -1705,27 +1777,24 @@ class FleetSimulator:
         while demand and demand[0][0] < expire:
             _, n, _, _ = demand.popleft()
             wg_counts[n] -= 1
-        # w_group = n * count from the incremental window counts:
-        # integer-exact, so it equals the full-window rescan bitwise
-        wg = {n: float(n * c) for n, c in wg_counts.items() if c > 0}
-        summary = ScheduleSummary(
-            name=cfg.policy, assignments=[], total_gpu_time=0.0,
-            latencies=[], violations=0, group_workloads=wg)
         # early in the run the deque spans less than horizon_s of
         # arrivals; dividing by the full horizon would underestimate
         # demand ~(horizon/t)x and release the warm pool into a queue
         # transient — normalize by the window actually observed
         seen = min(cfg.horizon_s, t)
-        # the same demand window, with per-request device profiles:
-        # deadline-aware floors keep spot-first scaling from starving
-        # the reserved class when spot is too slow for tight deadlines
-        # (no-op for a homogeneous pool — the golden-trace anchor).
+        # w_group = n * count from the incremental window counts (exact
+        # integer arithmetic inside plan_capacity_targets — bit-identical
+        # to the full-window rescan it replaced).  The same demand
+        # window, with per-request device profiles: deadline-aware
+        # floors keep spot-first scaling from starving the reserved
+        # class when spot is too slow for tight deadlines (no-op for a
+        # homogeneous pool — the golden-trace anchor).
         # planner.p, not self.p: under adaptive SLA the floors must
         # judge feasibility against the t_lim new arrivals are actually
         # being solved for (same r_cloud, so the supply sizing is
         # unchanged)
-        plan = allocate_gpus_heterogeneous(
-            summary, self.planner.p, self.capacity_spec,
+        plan = plan_capacity_targets(
+            cfg.policy, wg_counts, self.planner.p, self.capacity_spec,
             current=self.pool.current_counts(), horizon_s=seen,
             headroom=cfg.headroom,
             release_threshold=cfg.release_threshold,
@@ -2238,12 +2307,8 @@ class FleetSimulatorV2(FleetSimulator):
                 _, counts = demand.popleft()
                 for n, c in counts.items():
                     wg_counts[n] -= c
-            wg = {n: float(n * c) for n, c in wg_counts.items() if c > 0}
-            summary = ScheduleSummary(
-                name=cfg.policy, assignments=[], total_gpu_time=0.0,
-                latencies=[], violations=0, group_workloads=wg)
-            plan = allocate_gpus_heterogeneous(
-                summary, planner.p, self.capacity_spec,
+            plan = plan_capacity_targets(
+                cfg.policy, wg_counts, planner.p, self.capacity_spec,
                 current={cls_name: cap},
                 horizon_s=min(cfg.horizon_s, now),
                 headroom=cfg.headroom,
@@ -2465,10 +2530,7 @@ class FleetSimulatorV2(FleetSimulator):
         pl._cap_integral = cap_int
         pl._last_t = last_t
         self.pool.peak_capacity = peak
-        merged = StreamingLatencyStats()
-        for s in shards:
-            merged.merge(s)
-        self.stream = merged
+        self.stream = StreamingLatencyStats.merged(shards)
         return self._build_result(last_t)
 
     # -- main loop ---------------------------------------------------------
@@ -2482,6 +2544,11 @@ class FleetSimulatorV2(FleetSimulator):
         if cfg.v2_fast != "off" and self._fast_eligible():
             self._fast_lane = True
             self._fast_blockers_rec = []
+            if cfg.processes > 1 or cfg.shard_cohorts is not None:
+                # cohort-sharded BSP mode (docs/sim_core_v2.md,
+                # "Multiprocess sharding"); lazy import avoids a cycle
+                from repro.serving.shard_sim import run_sharded
+                return run_sharded(self)
             return self._run_fast()
         # loud fallback: the wheel path runs, and the result names why
         self._fast_lane = False
@@ -2517,10 +2584,7 @@ class FleetSimulatorV2(FleetSimulator):
         if self._trace is not None:
             self._trace.close()
         if self._shards is not None:
-            merged = StreamingLatencyStats()
-            for s in self._shards:
-                merged.merge(s)
-            self.stream = merged
+            self.stream = StreamingLatencyStats.merged(self._shards)
         return self._build_result(t)
 
 

@@ -1,0 +1,235 @@
+"""Multiprocess cohort-sharded simulation (serving/shard_sim.py;
+docs/sim_core_v2.md, "Multiprocess sharding").
+
+Covers the PR acceptance criteria:
+
+  * P-invariance: ``processes`` in {1, 2, 4} produce BIT-IDENTICAL
+    results — counters, GPU-seconds, P² percentiles, per-shard records
+    and metric rows.  The simulation depends only on
+    ``(seed, shard_cohorts)``, never on the worker count: cohorts own
+    private rng substreams and every coordinator fold walks cohorts in
+    id order.
+  * the sharded lane pins its own golden anchor (the plain-v2 golden in
+    test_sim_core_v2.py stays pinned, untouched — processes=1 without
+    shard_cohorts never enters the shard path).
+  * sharded aggregates match the plain v2 fast lane AND the v1 oracle
+    within the documented tolerances at moderate-to-high per-lane rates
+    (low per-lane rates dilute batching windows; see the doc).
+  * fast-lane blockers still fall back loudly to the wheel (result
+    reports processes=1, no shard records) and ``v2_fast="require"``
+    raises — sharding is never silently dropped.
+  * config validation, ``slice_evenly`` and the deterministic
+    provision-split helper.
+"""
+import math
+
+import pytest
+
+from repro.core.capacity import slice_evenly
+from repro.serving.fleet_sim import SimConfig, run_fleet_sim
+from repro.serving.shard_sim import _distribute_add
+
+#: Moderate-to-high rate on purpose: each of the 4 cohort lanes sees
+#: rate/4 = 150 req/s, enough to keep batching windows filling at the
+#: same cadence as the unsharded lane (the doc's low-rate caveat).
+SHARD = dict(policy="variable+batching", rate=600.0, duration=40.0,
+             gpus_init=300, max_gpus=800, metrics_interval_s=10.0,
+             core="v2", exact_stats=False)
+
+#: Pinned sharded-lane anchor (seed 7, shard_cohorts=4): any worker
+#: count must reproduce these numbers bitwise.
+SHARD_GOLDEN = dict(
+    n_arrivals=24093, n_completed=24093, violations=678,
+    total_gpu_seconds=12088.415999999545, peak_gpus=549, final_gpus=549,
+    released_gpus=0, n_events=72396,
+    p50=7.813435694774972, p99=8.610533060619176,
+    utilization=0.5315926121371831)
+
+#: Same rationale as test_sim_core_v2.ORACLE tolerances: cohorts draw
+#: independent arrival substreams, so agreement is distributional.
+COUNT_RTOL = 0.10
+VIOL_ATOL = 0.05
+GPU_PER_REQ_RTOL = 0.05
+PCTL_RTOL = 0.15
+
+
+def _sharded(processes, seed=7, **over):
+    cfg = dict(SHARD, seed=seed, shard_cohorts=4, processes=processes)
+    cfg.update(over)
+    return run_fleet_sim(SimConfig(**cfg))
+
+
+@pytest.fixture(scope="module")
+def shard_runs():
+    """One sharded run per worker count; P > 1 spawns real workers."""
+    return {p: _sharded(p) for p in (1, 2, 4)}
+
+
+# --------------------------------------------------------------------------
+# P-invariance: bit-identical across worker counts
+# --------------------------------------------------------------------------
+def test_p_invariant_across_worker_counts(shard_runs):
+    a = shard_runs[1]
+    for p in (2, 4):
+        b = shard_runs[p]
+        for f in ("n_arrivals", "violations", "total_gpu_seconds",
+                  "peak_gpus", "final_gpus", "released_gpus", "n_events",
+                  "utilization", "total_gpu_cost", "per_shard",
+                  "timeseries", "shard_chunk_s"):
+            assert getattr(a, f) == getattr(b, f), (f, p)
+        assert b.processes == p             # run metadata, not simulation
+        assert a.n_completed() == b.n_completed()
+        for q in (50.0, 99.0):
+            assert a.stream.percentile(q) == b.stream.percentile(q)
+
+
+def test_worker_rss_reported_per_worker(shard_runs):
+    # in-process P=1 has no child processes to meter
+    assert shard_runs[1].worker_peak_rss_mb == []
+    for p in (2, 4):
+        rss = shard_runs[p].worker_peak_rss_mb
+        assert len(rss) == p
+        assert all(x > 0 for x in rss)
+
+
+def test_per_shard_counters_sum_exactly(shard_runs):
+    res = shard_runs[1]
+    assert len(res.per_shard) == 4
+    assert [s["cohort"] for s in res.per_shard] == [0, 1, 2, 3]
+    for key, total in (("arrivals", res.n_arrivals),
+                       ("violations", res.violations),
+                       ("completed", res.n_completed())):
+        assert sum(s[key] for s in res.per_shard) == total
+    assert math.isclose(sum(s["gpu_seconds"] for s in res.per_shard),
+                        res.total_gpu_seconds, rel_tol=1e-9)
+
+
+# --------------------------------------------------------------------------
+# golden anchor for the sharded lane
+# --------------------------------------------------------------------------
+def test_sharded_golden_aggregates(shard_runs):
+    res = shard_runs[1]
+    got = dict(
+        n_arrivals=res.n_arrivals, n_completed=res.n_completed(),
+        violations=res.violations,
+        total_gpu_seconds=res.total_gpu_seconds, peak_gpus=res.peak_gpus,
+        final_gpus=res.final_gpus, released_gpus=res.released_gpus,
+        n_events=res.n_events, p50=res.stream.percentile(50.0),
+        p99=res.stream.percentile(99.0), utilization=res.utilization)
+    assert got == SHARD_GOLDEN
+    assert res.fast_lane
+    assert res.processes == 1
+    assert res.shard_chunk_s is not None
+
+
+# --------------------------------------------------------------------------
+# the plain config never enters the shard path
+# --------------------------------------------------------------------------
+def test_plain_v2_config_skips_shard_path():
+    res = run_fleet_sim(SimConfig(policy="variable+batching", rate=12.0,
+                                  duration=10.0, seed=7, gpus_init=10,
+                                  max_gpus=32, core="v2",
+                                  exact_stats=False, processes=1))
+    assert res.fast_lane
+    assert res.processes == 1
+    assert res.shard_chunk_s is None
+    assert res.per_shard == []
+    assert res.worker_peak_rss_mb == []
+
+
+# --------------------------------------------------------------------------
+# fidelity: plain v2 fast lane and the v1 core as oracles
+# --------------------------------------------------------------------------
+def _assert_close(ref, res):
+    n1, n2 = ref.n_completed(), res.n_completed()
+    assert n1 > 0 and n2 > 0
+    assert abs(n1 - n2) <= COUNT_RTOL * max(n1, n2)
+    assert abs(ref.violations / n1 - res.violations / n2) <= VIOL_ATOL
+    g1, g2 = ref.total_gpu_seconds / n1, res.total_gpu_seconds / n2
+    assert abs(g1 - g2) <= GPU_PER_REQ_RTOL * max(g1, g2)
+    for q in (50, 99):
+        p1, p2 = ref.latency_percentile(q), res.latency_percentile(q)
+        assert abs(p1 - p2) <= PCTL_RTOL * max(abs(p1), abs(p2))
+
+
+@pytest.mark.parametrize("seed", [7, 11])
+def test_sharded_matches_plain_v2_aggregates(seed):
+    ref = run_fleet_sim(SimConfig(seed=seed, **SHARD))
+    _assert_close(ref, _sharded(1, seed=seed))
+
+
+def test_sharded_matches_v1_oracle(shard_runs):
+    v1 = dict(SHARD, seed=7)
+    del v1["core"]
+    _assert_close(run_fleet_sim(SimConfig(**v1)), shard_runs[1])
+
+
+# --------------------------------------------------------------------------
+# loud fallback: blockers win over sharding, "require" raises
+# --------------------------------------------------------------------------
+def test_blocked_config_falls_back_to_wheel():
+    cfg = dict(policy="variable+batching", rate=12.0, duration=10.0,
+               seed=7, gpus_init=10, max_gpus=32, core="v2",
+               processes=2)                 # exact_stats=True by default
+    res = run_fleet_sim(SimConfig(**cfg))
+    assert not res.fast_lane
+    assert "exact_stats" in res.fast_lane_blockers
+    assert res.processes == 1               # sharding never ran
+    assert res.per_shard == []
+    with pytest.raises(ValueError, match="exact_stats"):
+        run_fleet_sim(SimConfig(v2_fast="require", **cfg))
+
+
+# --------------------------------------------------------------------------
+# validation
+# --------------------------------------------------------------------------
+def _cfg(**kw):
+    return SimConfig(policy="variable+batching", rate=5.0, duration=1.0,
+                     **kw)
+
+
+def test_validate_rejects_bad_shard_configs():
+    with pytest.raises(ValueError, match="core='v2'"):
+        _cfg(processes=2).validate()        # v1 core
+    with pytest.raises(ValueError, match="core='v2'"):
+        _cfg(shard_cohorts=4).validate()
+    with pytest.raises(ValueError, match="processes"):
+        _cfg(core="v2", processes=0).validate()
+    with pytest.raises(ValueError, match="shard_cohorts"):
+        _cfg(core="v2", shard_cohorts=0).validate()
+    with pytest.raises(ValueError, match="shard_chunk_s"):
+        _cfg(core="v2", shard_chunk_s=0.0).validate()
+
+
+def test_run_rejects_undersized_fleet_or_capacity():
+    with pytest.raises(ValueError, match="fleet size"):
+        run_fleet_sim(_cfg(core="v2", exact_stats=False, gpus_init=4,
+                           max_gpus=8, shard_cohorts=2000))
+    with pytest.raises(ValueError, match="capacity"):
+        run_fleet_sim(_cfg(core="v2", exact_stats=False, gpus_init=4,
+                           max_gpus=128, shard_cohorts=64))
+
+
+# --------------------------------------------------------------------------
+# deterministic capacity-split helpers
+# --------------------------------------------------------------------------
+def test_slice_evenly_remainder_to_low_cohorts():
+    assert slice_evenly(10, 4) == [3, 3, 2, 2]
+    assert slice_evenly(3, 5) == [1, 1, 1, 0, 0]
+    assert slice_evenly(8, 2) == [4, 4]
+    for total, parts in ((0, 3), (17, 5), (1000, 7)):
+        s = slice_evenly(total, parts)
+        assert sum(s) == total and len(s) == parts
+        assert s == sorted(s, reverse=True)   # low ids get the remainder
+    with pytest.raises(ValueError):
+        slice_evenly(4, 0)
+
+
+def test_distribute_add_equalizes_and_is_deterministic():
+    assert _distribute_add(5, [3, 1, 1]) == [1, 2, 2]
+    assert _distribute_add(0, [3, 1, 1]) == [0, 0, 0]
+    give = _distribute_add(7, [2, 2, 2, 2])
+    assert sum(give) == 7
+    assert give == _distribute_add(7, [2, 2, 2, 2])   # deterministic
+    # ties break by cohort id: the extra unit lands on the lowest ids
+    assert give == [2, 2, 2, 1]
